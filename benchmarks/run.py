@@ -1,0 +1,46 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+  bench_alertmix  — Fig. 4: 200k-feed ingestion, drain vs ingest, peak rate
+  bench_scaling   — source-count scaling + resizer ablation
+  bench_serving   — continuous vs static batching (FeedRouter admission)
+  bench_train     — CPU train-step throughput per model family
+  bench_roofline  — §Roofline table from the dry-run records
+
+Run everything:  PYTHONPATH=src python -m benchmarks.run
+One benchmark:   PYTHONPATH=src python -m benchmarks.bench_alertmix
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_alertmix,
+        bench_roofline,
+        bench_scaling,
+        bench_serving,
+        bench_train,
+    )
+
+    rows: list = []
+    failures = 0
+    for mod in (bench_alertmix, bench_scaling, bench_serving, bench_train,
+                bench_roofline):
+        try:
+            mod.main(rows)
+        except Exception:
+            failures += 1
+            print(f"BENCH FAILED: {mod.__name__}", file=sys.stderr)
+            traceback.print_exc()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""End-to-end serving driver: a small model serving batched requests with
+continuous batching + priority admission (the FeedRouter pull logic).
+
+  PYTHONPATH=src python examples/serve_continuous_batching.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "qwen2.5-3b", "--requests", "24",
+                "--max-batch", "6", "--max-new", "12",
+                "--priority-frac", "0.25"])

@@ -1,0 +1,385 @@
+"""Roofline cost model over compiled (post-SPMD, post-optimization) HLO.
+
+``compiled.cost_analysis()`` visits each while-loop body ONCE, which
+undercounts scanned programs (layer scans, microbatch scans, flash-
+attention chunk scans) by orders of magnitude.  This walker re-derives
+the three roofline terms from the HLO text, multiplying every while body
+by its ``known_trip_count``:
+
+  flops       — matmul FLOPs (dot ops, incl. dots inside fusions)
+  bytes       — HBM traffic proxy: operand+result bytes at top-level op
+                (= fusion) boundaries; get-tuple-element/bitcast/tuple/
+                parameter are free
+  coll_bytes  — bytes through all-gather / all-reduce / reduce-scatter /
+                all-to-all / collective-permute (max of operand/result)
+
+All numbers are PER DEVICE (the SPMD module is the per-device program).
+
+Hardware model (TPU v5e-like, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+_FREE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "all-gather-done",
+    "all-reduce-done", "collective-permute-done", "iota",
+}
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    shapes: List[Tuple[str, Tuple[int, ...]]]   # result (tuple-flattened)
+    operands: List[str]
+    attrs: str
+    opstr: str = ""                              # raw text inside call parens
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_bytes_tpu: float = 0.0   # f32 activation collectives at bf16 rate
+    coll_by_type: Dict[str, float] = field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def add_coll(self, kind: str, b: float, b_tpu: Optional[float] = None):
+        self.coll_bytes += b
+        self.coll_bytes_tpu += b if b_tpu is None else b_tpu
+        self.coll_by_type[kind] = self.coll_by_type.get(kind, 0.0) + b
+
+
+def _shape_bytes(shapes: List[Tuple[str, Tuple[int, ...]]]) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_type(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _TYPE_RE.finditer(s):
+        dims = tuple(int(x) for x in m.group(2).split(",") if x)
+        out.append((m.group(1), dims))
+    return out
+
+
+_INST_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+
+
+def parse_hlo(text: str):
+    """Returns (computations dict name -> {insts, symtab}, entry_name)."""
+    comps: Dict[str, Dict] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = {"insts": [], "symtab": {}}
+            comps[m.group(1)] = cur
+            if line.startswith("ENTRY"):
+                entry = m.group(1)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INST_RE.match(line)
+        if not mi:
+            continue
+        name, typ, opcode, rest = mi.groups()
+        # `rest` = operands...) , attrs...
+        depth = 1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        opstr, attrs = rest[:i], rest[i + 1:]
+        operands = re.findall(r"%([\w\.\-]+)", opstr)
+        inst = Instr(name, opcode, _parse_type(typ), operands, attrs, opstr)
+        cur["insts"].append(inst)
+        cur["symtab"][name] = inst
+    return comps, entry
+
+
+def _called(attrs: str) -> List[str]:
+    out = []
+    for key in ("calls=", "to_apply=", "body=", "condition=",
+                "true_computation=", "false_computation="):
+        for m in re.finditer(re.escape(key) + r"%?([\w\.\-]+)", attrs):
+            out.append((key.rstrip("="), m.group(1)))
+    return out
+
+
+def _dot_flops(inst: Instr, symtab) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
+    if not m:
+        return 0.0
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs = symtab.get(inst.operands[0]) if inst.operands else None
+    if lhs is None or not lhs.shapes:
+        return 0.0
+    lhs_dims = lhs.shapes[0][1]
+    k = 1
+    for c in cdims:
+        if c < len(lhs_dims):
+            k *= lhs_dims[c]
+    out_elems = 1
+    for _, dims in inst.shapes:
+        for d in dims:
+            out_elems *= d
+    return 2.0 * out_elems * k
+
+
+def _trip_count(inst: Instr) -> Optional[int]:
+    m = re.search(r'known_trip_count[^0-9]*(\d+)', inst.attrs)
+    if m:
+        return int(m.group(1))
+    return None
+
+
+def _fused_flops(comp_name: str, comps) -> float:
+    comp = comps.get(comp_name)
+    if comp is None:
+        return 0.0
+    total = 0.0
+    for inst in comp["insts"]:
+        if inst.opcode == "dot":
+            total += _dot_flops(inst, comp["symtab"])
+        elif inst.opcode == "fusion":
+            for kind, c in _called(inst.attrs):
+                if kind == "calls":
+                    total += _fused_flops(c, comps)
+    return total
+
+
+def _fusion_effective_bytes(inst: Instr, comps, symtab) -> float:
+    """HBM traffic of one fusion execution.
+
+    Scan bodies slice their big carried buffers: a fused dynamic-slice
+    reads only its block, and an in-place dynamic-update-slice root
+    writes only the update region — charging full operand/result sizes
+    per trip overcounts by the scan length.  Parameters consumed ONLY by
+    dynamic-slice are charged at slice size; a dynamic-update-slice root
+    charges 2x the update region instead of the full result + target.
+    """
+    called = [c for k, c in _called(inst.attrs) if k == "calls"]
+    comp = comps.get(called[0]) if called else None
+    res_b = _shape_bytes(inst.shapes)
+    opd_full = [
+        _shape_bytes(symtab[o].shapes) if o in symtab else 0.0
+        for o in inst.operands
+    ]
+    if comp is None:
+        return res_b + sum(opd_full)
+
+    # parameter index -> in-fusion name (from `parameter(N)` in opstr)
+    by_index: dict = {}
+    for fi in comp["insts"]:
+        if fi.opcode == "parameter":
+            m = re.match(r"\s*(\d+)", fi.opstr)
+            if m:
+                by_index[int(m.group(1))] = fi.name
+
+    # uses of each parameter inside the fusion
+    uses: dict = {}
+    sliced: dict = {}
+    dus_target = None
+    root = comp["insts"][-1] if comp["insts"] else None
+    for fi in comp["insts"]:
+        for pos, o in enumerate(fi.operands):
+            src = comp["symtab"].get(o)
+            if src is None or src.opcode != "parameter":
+                continue
+            if fi.opcode == "dynamic-slice" and pos == 0:
+                sliced[o] = sliced.get(o, 0.0) + _shape_bytes(fi.shapes)
+                uses.setdefault(o, set()).add("slice")
+            elif fi is root and fi.opcode == "dynamic-update-slice" and pos == 0:
+                dus_target = o
+                uses.setdefault(o, set()).add("dus_target")
+            else:
+                uses.setdefault(o, set()).add("other")
+
+    total = 0.0
+    for i in range(len(inst.operands)):
+        full = opd_full[i]
+        pn = by_index.get(i)
+        if pn is not None:
+            u = uses.get(pn, set())
+            if not u:
+                continue                      # dead parameter
+            if u == {"slice"}:
+                total += min(full, sliced.get(pn, full))
+                continue
+            if u == {"dus_target"}:
+                continue                      # aliased in-place target
+        total += full
+
+    if root is not None and root.opcode == "dynamic-update-slice" \
+            and len(root.operands) >= 2:
+        upd = comp["symtab"].get(root.operands[1])
+        upd_b = _shape_bytes(upd.shapes) if upd is not None else res_b
+        return total + 2.0 * upd_b            # read update + write region
+    return total + res_b
+
+
+def _body_has_square_dot(comp) -> bool:
+    for inst in comp["insts"]:
+        if inst.opcode == "dot" and inst.shapes:
+            dims = inst.shapes[0][1]
+            if len(dims) >= 2 and dims[-1] == dims[-2] and dims[-1] >= 64:
+                return True
+        if inst.opcode == "fusion":
+            pass
+    return False
+
+
+def walk(text: str, kernel_trips: frozenset = frozenset()) -> Cost:
+    """kernel_trips: trip counts of the chunked-attention / SSD scan loops
+    whose bodies the Pallas kernels fuse on TPU.  Inside a matched loop
+    (trip count matches AND the body computes a square >=64x64 dot — the
+    score/decay tile) only dot and collective traffic is charged; the
+    elementwise online-softmax/decay intermediates stay in VMEM."""
+    comps, entry = parse_hlo(text)
+    cost = Cost()
+
+    def visit(comp_name: str, mult: float, kernel_mode: bool = False):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        symtab = comp["symtab"]
+        for inst in comp["insts"]:
+            op = inst.opcode
+            if op in _FREE:
+                continue
+            if op == "while":
+                trips = _trip_count(inst)
+                if trips is None:
+                    trips = 1
+                    cost.unknown_trip_loops += 1
+                for kind, c in _called(inst.attrs):
+                    if kind == "body":
+                        km = kernel_mode or (
+                            trips in kernel_trips
+                            and c in comps and _body_has_square_dot(comps[c]))
+                        visit(c, mult * trips, km)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for kind, c in _called(inst.attrs):
+                    if kind in ("calls", "to_apply", "true_computation",
+                                "false_computation"):
+                        visit(c, mult, kernel_mode)
+                continue
+            res_b = _shape_bytes(inst.shapes)
+            opd_b = sum(
+                _shape_bytes(symtab[o].shapes) for o in inst.operands
+                if o in symtab
+            )
+            if op in _COLLECTIVES:
+                kind = op.replace("-start", "")
+                b = max(res_b, opd_b) * mult
+                # XLA:CPU promotes bf16 dot outputs to f32, so activation
+                # collectives (tagged dot_general / convert_element_type)
+                # carry f32 payloads the TPU backend keeps in bf16; the
+                # tpu-adjusted metric charges those at bf16 width.
+                b_tpu = b
+                if any(dt == "f32" for dt, _ in inst.shapes) and (
+                        "dot_general" in inst.attrs
+                        or "convert_element_type" in inst.attrs):
+                    b_tpu = b / 2.0
+                cost.add_coll(kind, b, b_tpu)
+                cost.bytes += (res_b + opd_b) * mult
+                continue
+            if op == "fusion":
+                if not kernel_mode:
+                    cost.bytes += _fusion_effective_bytes(inst, comps, symtab) * mult
+                for k, c in _called(inst.attrs):
+                    if k == "calls":
+                        cost.flops += _fused_flops(c, comps) * mult
+                continue
+            if op == "dot":
+                cost.flops += _dot_flops(inst, symtab) * mult
+                cost.bytes += (res_b + opd_b) * mult
+                continue
+            if kernel_mode:
+                continue    # VMEM-resident inside the fused kernel
+            if op == "dynamic-slice":
+                # reads only the slice it produces
+                cost.bytes += 2.0 * res_b * mult
+                continue
+            if op == "dynamic-update-slice":
+                upd = symtab.get(inst.operands[1]) if len(inst.operands) > 1 else None
+                upd_b = _shape_bytes(upd.shapes) if upd is not None else res_b
+                cost.bytes += 2.0 * upd_b * mult   # read update + write region
+                continue
+            cost.bytes += (res_b + opd_b) * mult
+
+    if entry:
+        visit(entry, 1.0)
+    return cost
+
+
+def roofline_terms(cost: Cost) -> Dict[str, float]:
+    t_compute = cost.flops / PEAK_FLOPS
+    t_memory = cost.bytes / HBM_BW
+    t_coll = cost.coll_bytes / ICI_BW
+    dom = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+    }
+
+
+def model_flops_per_device(n_active_params: int, tokens: int, kind: str,
+                           num_devices: int) -> float:
+    """6ND for training, 2ND for inference — per device."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens / num_devices
+
+
+def roofline_fraction(model_flops_dev: float, terms: Dict[str, float]) -> float:
+    """useful-FLOPs time / bottleneck time (the §Perf score)."""
+    t_useful = model_flops_dev / PEAK_FLOPS
+    t_bound = max(terms["t_compute_s"], terms["t_memory_s"],
+                  terms["t_collective_s"])
+    return t_useful / t_bound if t_bound > 0 else 0.0

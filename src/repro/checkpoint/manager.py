@@ -1,0 +1,159 @@
+"""Fault-tolerant checkpointing.
+
+  * atomic: written to ``step_N.tmp`` then renamed — a crash mid-save
+    leaves the previous checkpoint valid;
+  * async: the device->host transfer happens synchronously (cheap) and
+    serialization runs on a background thread, overlapping training;
+  * resharding restore: arrays are loaded on host then ``device_put`` to
+    the CURRENT mesh's shardings — a checkpoint from a 4-device mesh
+    restores onto 8 devices (elastic scaling) or 1 (local debug);
+  * the AlertMix data-pipeline state (stream registry, packing remainder,
+    sample buffer) checkpoints NEXT TO the model, so restart resumes the
+    exact token stream (no replays, no gaps relative to the checkpoint).
+
+Tensors are stored as one .npz per checkpoint (bf16 via ml_dtypes views);
+metadata (tree structure, step, config) as JSON.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, Any]:
+    out = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[key] = leaf
+    return out
+
+
+def _unflatten_like(template: Any, flat: Dict[str, np.ndarray]) -> Any:
+    leaves = []
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_save else None
+        self._pending: Optional[Future] = None
+
+    # ---- save ---------------------------------------------------------------
+    def save(self, step: int, params: Any, opt_state: Any,
+             data_state: Optional[dict] = None,
+             extra: Optional[dict] = None) -> None:
+        # device -> host now (so training can mutate donated buffers)
+        host = {
+            "params": jax.tree.map(np.asarray, params),
+            "opt_state": jax.tree.map(np.asarray, opt_state),
+        }
+        meta = {"step": step, "time": time.time(), "extra": extra or {}}
+
+        def write():
+            tmp = os.path.join(self.directory, f"step_{step}.tmp")
+            final = os.path.join(self.directory, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            arrays = {}
+            for group, tree in host.items():
+                for k, v in _flatten(tree).items():
+                    arrays[f"{group}::{k}"] = np.asarray(v)
+            # bf16 has no portable npz representation: store raw + dtype
+            dtypes = {k: str(v.dtype) for k, v in arrays.items()}
+            np.savez(os.path.join(tmp, "arrays.npz"),
+                     **{k: v.view(np.uint16) if v.dtype.name == "bfloat16" else v
+                        for k, v in arrays.items()})
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump({**meta, "dtypes": dtypes}, f)
+            if data_state is not None:
+                with open(os.path.join(tmp, "data_state.json"), "w") as f:
+                    json.dump(data_state, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if self._pool is not None:
+            self.wait()
+            self._pending = self._pool.submit(write)
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ---- restore --------------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, params_template: Any, opt_template: Any,
+                step: Optional[int] = None,
+                shardings: Optional[Tuple[Any, Any]] = None
+                ) -> Tuple[Any, Any, Optional[dict], dict]:
+        """Returns (params, opt_state, data_state, meta).  `shardings` is
+        an optional (param_shardings, opt_shardings) pair of pytrees of
+        NamedSharding for resharded (elastic) restore."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, f"no checkpoints in {self.directory}"
+        path = os.path.join(self.directory, f"step_{step}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        import ml_dtypes
+        raw = np.load(os.path.join(path, "arrays.npz"))
+        arrays = {}
+        for k in raw.files:
+            v = raw[k]
+            if meta["dtypes"][k] == "bfloat16":
+                v = v.view(ml_dtypes.bfloat16)
+            arrays[k] = v
+        groups = {"params": {}, "opt_state": {}}
+        for k, v in arrays.items():
+            g, key = k.split("::", 1)
+            groups[g][key] = v
+        params = _unflatten_like(params_template, groups["params"])
+        opt = _unflatten_like(opt_template, groups["opt_state"])
+        if shardings is not None:
+            p_sh, o_sh = shardings
+            params = jax.tree.map(jax.device_put, params, p_sh)
+            opt = jax.tree.map(jax.device_put, opt, o_sh)
+        data_state = None
+        ds_path = os.path.join(path, "data_state.json")
+        if os.path.exists(ds_path):
+            with open(ds_path) as f:
+                data_state = json.load(f)
+        return params, opt, data_state, meta

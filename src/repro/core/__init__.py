@@ -1,0 +1,32 @@
+"""AlertMix core — the paper's contribution (Singhal, Pant & Sinha 2018).
+
+An end-to-end multi-source streaming platform:
+
+  StreamRegistry        persistent source store w/ due-dates + leases
+                        (the paper's Couchbase; at-least-once via re-pick)
+  Scheduler             Bootstrapper + Cron: periodic StreamsPicker ticks
+  ChannelDistributor    routes picked streams to per-channel routers
+  BoundedPriorityQueue  bounded priority mailboxes (backpressure)
+  FeedRouter            SQS pull logic: replenish-to-optimal buffers with
+                        count + timeout triggers
+  BalancingPool         workers sharing one mailbox (busy->idle rebalance)
+  OptimalSizeExploringResizer  throughput-hill-climbing pool sizing
+  DeadLettersListener   overflow monitoring + alerting
+  Worker/dedup          conditional GET (etag/last-modified) + duplicate
+                        detection
+
+Two integrations make it load-bearing for the training framework:
+  repro.data.stream_pipeline  — multi-source training-data ingestion with
+                                backpressure into the train loop
+  repro.serve.engine          — continuous batching: the FeedRouter logic
+                                applied to inference requests
+"""
+from repro.core.registry import StreamRegistry, StreamSource, StreamStatus
+from repro.core.queues import BoundedPriorityQueue, Message, QueueFullError
+from repro.core.dead_letters import DeadLettersListener
+from repro.core.scheduler import Scheduler
+from repro.core.router import FeedRouter
+from repro.core.pool import BalancingPool
+from repro.core.resizer import OptimalSizeExploringResizer
+from repro.core.dedup import DedupWindow
+from repro.core.pipeline import AlertMixPipeline, PipelineConfig

@@ -1,0 +1,38 @@
+"""DeadLettersListener (paper): subscribes to overflow from the bounded
+mailboxes, keeps monitoring stats (the paper's ELK stack), and fires an
+alert hook when the drop rate is unexpected."""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+
+class DeadLettersListener:
+    def __init__(self, alert_threshold: int = 100,
+                 alert_hook: Optional[Callable[[str, int], None]] = None,
+                 keep_last: int = 1000):
+        self.alert_threshold = alert_threshold
+        self.alert_hook = alert_hook
+        self._lock = threading.Lock()
+        self.by_reason: Dict[str, int] = collections.defaultdict(int)
+        self.total = 0
+        self.recent: Deque[Tuple[str, object]] = collections.deque(maxlen=keep_last)
+        self.alerts: List[str] = []
+
+    def publish(self, msg, reason: str = "unknown") -> None:
+        with self._lock:
+            self.total += 1
+            self.by_reason[reason] += 1
+            self.recent.append((reason, msg))
+            if self.by_reason[reason] == self.alert_threshold:
+                alert = (f"dead-letter threshold reached: {reason} x "
+                         f"{self.alert_threshold}")
+                self.alerts.append(alert)
+                if self.alert_hook is not None:
+                    self.alert_hook(reason, self.alert_threshold)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"total": self.total, "by_reason": dict(self.by_reason),
+                    "alerts": list(self.alerts)}

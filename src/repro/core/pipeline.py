@@ -1,0 +1,190 @@
+"""AlertMixPipeline — end-to-end assembly of the paper's architecture
+(Fig. 2 + the SQS pull logic of Fig. 3):
+
+  Scheduler/Cron -> StreamsPicker -> ChannelDistributor
+    -> per-channel {main, priority} queues
+    -> FeedRouter (replenish-to-optimal worker mailbox)
+    -> BalancingPool workers (+ OptimalSizeExploringResizer)
+         worker: conditional GET -> redirect handling -> dedup -> enrich
+                 -> multi-channel sinks; StreamsUpdater marks processed
+    -> DeadLettersListener monitors every bounded mailbox
+
+Runs against a VIRTUAL clock (``run_for``) so the paper's 24h/200k-source
+experiment replays in seconds, or incrementally via ``step``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.dead_letters import DeadLettersListener
+from repro.core.dedup import DedupWindow, content_hash
+from repro.core.pool import BalancingPool
+from repro.core.queues import BoundedPriorityQueue, Message
+from repro.core.registry import StreamRegistry
+from repro.core.resizer import OptimalSizeExploringResizer
+from repro.core.router import FeedRouter
+from repro.core.scheduler import CHANNELS, ChannelDistributor, Scheduler
+from repro.core.sinks import IndexSink
+from repro.core.sources import NOT_MODIFIED, SourceSimulator
+
+
+@dataclass
+class PipelineConfig:
+    num_sources: int = 1000
+    pick_interval_s: float = 5.0       # cron period (paper: 5 seconds)
+    feed_interval_s: float = 300.0     # per-source refresh (paper: 5 min)
+    queue_capacity: int = 100_000
+    mailbox_capacity: int = 4096
+    optimal_buffer: int = 256          # FeedRouter target
+    replenish_after: int = 64
+    replenish_timeout_s: float = 1.0
+    workers: int = 8
+    resizer: bool = True
+    dedup_window: int = 1 << 16
+    channel_mix: Dict[str, float] = field(default_factory=lambda: {
+        "news": 0.70, "custom_rss": 0.15, "facebook": 0.08, "twitter": 0.07,
+    })
+
+
+@dataclass
+class Metrics:
+    """Per-interval counters — the CloudWatch charts of Fig. 4."""
+
+    sent: List[tuple] = field(default_factory=list)      # (t, n) enqueued
+    received: List[tuple] = field(default_factory=list)  # (t, n) processed
+    deleted: List[tuple] = field(default_factory=list)   # (t, n) completed
+    indexed_total: int = 0
+    fetched_total: int = 0
+    not_modified_total: int = 0
+    redirects_total: int = 0
+    duplicates_total: int = 0
+    malformed_total: int = 0
+
+
+class AlertMixPipeline:
+    def __init__(self, cfg: PipelineConfig, *, seed: int = 0,
+                 sinks: Optional[list] = None,
+                 item_hook: Optional[Callable] = None):
+        self.cfg = cfg
+        self.now = 0.0
+        self.dead_letters = DeadLettersListener()
+        self.registry = StreamRegistry(lease_s=cfg.feed_interval_s * 2)
+        self.sim = SourceSimulator(seed=seed)
+        self.sinks = sinks if sinks is not None else [IndexSink()]
+        self.item_hook = item_hook
+        self.metrics = Metrics()
+
+        # one {main, priority} queue pair per channel (Fig. 2 routers)
+        self.main_queues = {
+            c: BoundedPriorityQueue(cfg.queue_capacity, dead_letters=self.dead_letters)
+            for c in CHANNELS}
+        self.priority_queues = {
+            c: BoundedPriorityQueue(cfg.queue_capacity, dead_letters=self.dead_letters)
+            for c in CHANNELS}
+        self.distributor = ChannelDistributor(self.main_queues, self.priority_queues)
+        self.scheduler = Scheduler(
+            self.registry, self.distributor,
+            interval_s=cfg.pick_interval_s)
+
+        self.mailbox = BoundedPriorityQueue(
+            cfg.mailbox_capacity, dead_letters=self.dead_letters)
+        self.routers = [
+            FeedRouter(self.main_queues[c], self.priority_queues[c],
+                       self.mailbox, optimal_size=cfg.optimal_buffer // len(CHANNELS),
+                       replenish_after=cfg.replenish_after,
+                       replenish_timeout_s=cfg.replenish_timeout_s)
+            for c in CHANNELS]
+        self.dedup = DedupWindow(cfg.dedup_window)
+        resizer = OptimalSizeExploringResizer(
+            lower=1, upper=max(64, cfg.workers * 4), seed=seed) if cfg.resizer else None
+        self.pool = BalancingPool(self.mailbox, self._work, size=cfg.workers,
+                                  resizer=resizer)
+
+        # populate the registry (incremental add — sources spread over the
+        # first interval so picks don't all collide at t=0)
+        import random
+        rng = random.Random(seed)
+        chans, weights = zip(*cfg.channel_mix.items())
+        for i in range(cfg.num_sources):
+            self.registry.add_source(
+                rng.choices(chans, weights)[0],
+                url=f"https://feeds.example/{i}.xml",
+                interval_s=cfg.feed_interval_s,
+                first_due=rng.random() * cfg.feed_interval_s,
+                seed=i,
+            )
+
+    # ---- Worker (paper): conditional GET, redirects, dedup, process -------
+    def _work(self, msg: Message) -> None:
+        src = self.registry.get(msg.sid)
+        if src is None:
+            return
+        res = self.sim.fetch(src, self.now, etag=src.etag)
+        self.metrics.fetched_total += 1
+        if res.status == NOT_MODIFIED:
+            self.metrics.not_modified_total += 1
+            self.registry.mark_processed(src.sid, self.now, etag=res.etag)
+            return
+        if res.redirected_from:
+            self.metrics.redirects_total += 1      # follow the hop
+        accepted = 0
+        for item in res.items:
+            if item.malformed:
+                self.metrics.malformed_total += 1
+                self.dead_letters.publish(item, reason="malformed_item")
+                continue
+            h = content_hash(item.guid)
+            if self.dedup.seen_before(h):
+                self.metrics.duplicates_total += 1
+                continue
+            doc = {"title": item.title, "body": item.body,
+                   "published_at": item.published_at, "sid": src.sid,
+                   "channel": src.channel}
+            for sink in self.sinks:
+                sink.index(item.guid, doc)
+            if self.item_hook is not None:
+                self.item_hook(doc)
+            accepted += 1
+        self.metrics.indexed_total += accepted
+        self.registry.mark_processed(
+            src.sid, self.now, etag=res.etag, last_modified=res.last_modified)
+        for r in self.routers:
+            r.on_processed()
+
+    # ---- virtual-time drive ------------------------------------------------
+    def step(self, dt: float = 1.0, per_worker: int = 4) -> dict:
+        self.now += dt
+        picked = self.scheduler.maybe_tick(self.now)
+        pulled_box = [0]
+
+        def replenish(now):
+            pulled_box[0] += sum(r.maybe_replenish(now) for r in self.routers)
+
+        done = self.pool.step(self.now, per_worker=per_worker,
+                              replenish=replenish)
+        pulled = pulled_box[0]
+        if picked:
+            self.metrics.sent.append((self.now, picked))
+        if done:
+            self.metrics.received.append((self.now, done))
+            self.metrics.deleted.append((self.now, done))
+        return {"picked": picked, "pulled": pulled, "done": done,
+                "backlog": sum(len(q) for q in self.main_queues.values()),
+                "mailbox": len(self.mailbox), "pool": self.pool.size}
+
+    def run_for(self, seconds: float, dt: float = 1.0, per_worker: int = 4):
+        end = self.now + seconds
+        while self.now < end:
+            self.step(dt, per_worker=per_worker)
+        return self.metrics
+
+    # ---- fault tolerance ----------------------------------------------------
+    def snapshot(self) -> dict:
+        return {"now": self.now, "registry": self.registry.snapshot()}
+
+    def restore_registry(self, snap: dict) -> None:
+        self.now = snap["now"]
+        self.registry = StreamRegistry.restore(snap["registry"])
+        self.scheduler.registry = self.registry

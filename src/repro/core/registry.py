@@ -1,0 +1,184 @@
+"""StreamRegistry — the persistent stream store (paper's Couchbase).
+
+Responsibilities (paper §Proposed approach):
+  * thousands of sources, added/removed on an ongoing basis
+  * StreamsPickerActor semantics: pick a batch of streams by next-due
+    date; ALSO re-pick streams whose earlier pick never completed (lease
+    expired) -> at-least-once processing ("Message delivery Guarantee":
+    lost messages are simply re-picked next cycle)
+  * picked streams are marked in-process; completion sets next_due
+
+The due-date index is a lazy heap over (next_due, sid): scales to the
+paper's 200k sources (pick is O(k log n)).  ``snapshot``/``restore`` make
+the registry checkpointable next to model state (fault tolerance).
+"""
+from __future__ import annotations
+
+import enum
+import heapq
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+class StreamStatus(enum.Enum):
+    IDLE = 0
+    IN_PROCESS = 1
+
+
+@dataclass
+class StreamSource:
+    sid: int
+    channel: str                  # facebook | twitter | news | custom_rss
+    url: str = ""
+    interval_s: float = 300.0     # paper: every 5 minutes
+    priority: int = 1             # 0 = highest (PriorityStreamsActor)
+    next_due: float = 0.0
+    status: StreamStatus = StreamStatus.IDLE
+    lease_until: float = 0.0
+    etag: Optional[str] = None
+    last_modified: Optional[float] = None
+    fail_count: int = 0
+    seed: int = 0                 # drives the simulated feed content
+
+
+class StreamRegistry:
+    def __init__(self, lease_s: float = 600.0):
+        self._sources: Dict[int, StreamSource] = {}
+        self._heap: List[Tuple[float, int]] = []      # (next_due, sid), lazy
+        self._lock = threading.Lock()
+        self._next_sid = 0
+        self.lease_s = lease_s
+
+    # ---- source management (incremental add/remove — the paper's key
+    # flexibility claim over Kinesis/Storm/etc.) ----------------------------
+    def add_source(self, channel: str, *, url: str = "", interval_s: float = 300.0,
+                   priority: int = 1, first_due: float = 0.0, seed: int = 0) -> int:
+        with self._lock:
+            sid = self._next_sid
+            self._next_sid += 1
+            src = StreamSource(sid, channel, url, interval_s, priority,
+                               next_due=first_due, seed=seed or sid)
+            self._sources[sid] = src
+            heapq.heappush(self._heap, (src.next_due, sid))
+            return sid
+
+    def remove_source(self, sid: int) -> bool:
+        with self._lock:
+            return self._sources.pop(sid, None) is not None  # heap entry lazy
+
+    def get(self, sid: int) -> Optional[StreamSource]:
+        return self._sources.get(sid)
+
+    def __len__(self) -> int:
+        return len(self._sources)
+
+    # ---- StreamsPickerActor ------------------------------------------------
+    def pick_due(self, now: float, limit: int = 10_000) -> List[StreamSource]:
+        """Pop up to `limit` due streams; mark them in-process with a lease.
+        Streams whose lease expired are re-picked (at-least-once)."""
+        out: List[StreamSource] = []
+        with self._lock:
+            while self._heap and len(out) < limit:
+                due, sid = self._heap[0]
+                if due > now:
+                    break
+                heapq.heappop(self._heap)
+                src = self._sources.get(sid)
+                if src is None:
+                    continue                      # removed; lazy-deleted
+                if src.status is StreamStatus.IN_PROCESS:
+                    if src.lease_until > now:
+                        continue                  # someone holds a live lease
+                    # lease expired -> re-pick (worker died mid-processing)
+                if src.next_due > now:
+                    continue                      # stale heap entry
+                src.status = StreamStatus.IN_PROCESS
+                src.lease_until = now + self.lease_s
+                out.append(src)
+        return out
+
+    def requeue_expired(self, now: float) -> int:
+        """Push lease-expired in-process streams back onto the due heap."""
+        n = 0
+        with self._lock:
+            for src in self._sources.values():
+                if src.status is StreamStatus.IN_PROCESS and src.lease_until <= now:
+                    src.status = StreamStatus.IDLE
+                    heapq.heappush(self._heap, (src.next_due, sid := src.sid))
+                    n += 1
+        return n
+
+    # ---- StreamsUpdaterActor -----------------------------------------------
+    def mark_processed(self, sid: int, now: float, *, etag: Optional[str] = None,
+                       last_modified: Optional[float] = None) -> None:
+        with self._lock:
+            src = self._sources.get(sid)
+            if src is None:
+                return
+            src.status = StreamStatus.IDLE
+            src.fail_count = 0
+            if etag is not None:
+                src.etag = etag
+            if last_modified is not None:
+                src.last_modified = last_modified
+            src.next_due = now + src.interval_s
+            heapq.heappush(self._heap, (src.next_due, sid))
+
+    def mark_failed(self, sid: int, now: float, *, backoff: float = 2.0) -> None:
+        with self._lock:
+            src = self._sources.get(sid)
+            if src is None:
+                return
+            src.status = StreamStatus.IDLE
+            src.fail_count += 1
+            delay = min(src.interval_s * backoff ** src.fail_count,
+                        86_400.0)
+            src.next_due = now + delay
+            heapq.heappush(self._heap, (src.next_due, sid))
+
+    def prioritize(self, sid: int, now: float) -> None:
+        """PriorityStreamsActor: bump a stream (e.g. newly created) to the
+        front of the line."""
+        with self._lock:
+            src = self._sources.get(sid)
+            if src is None:
+                return
+            src.priority = 0
+            src.next_due = now
+            heapq.heappush(self._heap, (now, sid))
+
+    # ---- persistence (checkpoint with the model) ---------------------------
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "lease_s": self.lease_s,
+                "next_sid": self._next_sid,
+                "sources": [
+                    {
+                        "sid": s.sid, "channel": s.channel, "url": s.url,
+                        "interval_s": s.interval_s, "priority": s.priority,
+                        "next_due": s.next_due, "etag": s.etag,
+                        "last_modified": s.last_modified,
+                        "fail_count": s.fail_count, "seed": s.seed,
+                        # in-process reverts to idle on restore: the lease
+                        # holder is gone -> at-least-once re-pick
+                    }
+                    for s in self._sources.values()
+                ],
+            }
+
+    @classmethod
+    def restore(cls, snap: dict) -> "StreamRegistry":
+        reg = cls(lease_s=snap["lease_s"])
+        reg._next_sid = snap["next_sid"]
+        for d in snap["sources"]:
+            src = StreamSource(
+                d["sid"], d["channel"], d["url"], d["interval_s"],
+                d["priority"], next_due=d["next_due"], etag=d["etag"],
+                last_modified=d["last_modified"], fail_count=d["fail_count"],
+                seed=d["seed"],
+            )
+            reg._sources[src.sid] = src
+            heapq.heappush(reg._heap, (src.next_due, src.sid))
+        return reg

@@ -1,0 +1,78 @@
+"""OptimalSizeExploringResizer (paper: "resizes the pool to an optimal
+size that provides the most message throughput").
+
+Faithful to the Akka resizer's algorithm: the resizer alternates between
+EXPLORING (random jitter around the current size) and OPTIMIZING (jump
+toward the best-throughput region seen so far), keeping a performance log
+of messages-per-second by pool size.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass
+class ResizeDecision:
+    size: int
+    mode: str                      # "explore" | "optimize" | "hold"
+    throughput: float
+
+
+class OptimalSizeExploringResizer:
+    def __init__(self, lower: int = 1, upper: int = 64,
+                 chance_of_scaling_down_when_full: float = 0.2,
+                 explore_step: float = 0.1,
+                 downsize_after_underutilized_s: float = 72.0,
+                 seed: int = 0):
+        self.lower = lower
+        self.upper = upper
+        self.chance_down = chance_of_scaling_down_when_full
+        self.explore_step = explore_step
+        self.downsize_after = downsize_after_underutilized_s
+        self.perf_log: Dict[int, float] = {}      # size -> ewma msg/s
+        self._rng = random.Random(seed)
+        self._last_underutilized: Optional[float] = None
+        self.history: list[ResizeDecision] = []
+
+    def record(self, size: int, throughput: float, alpha: float = 0.5) -> None:
+        prev = self.perf_log.get(size)
+        self.perf_log[size] = (throughput if prev is None
+                               else alpha * throughput + (1 - alpha) * prev)
+
+    def propose(self, current: int, *, utilization: float, now: float,
+                throughput: float) -> int:
+        """Next pool size. utilization = busy_workers / size."""
+        self.record(current, throughput)
+
+        # long underutilization -> shrink toward lower bound
+        if utilization < 0.5:
+            if self._last_underutilized is None:
+                self._last_underutilized = now
+            elif now - self._last_underutilized > self.downsize_after:
+                size = max(self.lower, int(current * 0.8))
+                self.history.append(ResizeDecision(size, "downsize", throughput))
+                return size
+        else:
+            self._last_underutilized = None
+
+        explore = self._rng.random() < 0.4 or len(self.perf_log) < 3
+        if explore:
+            step = max(1, int(current * self.explore_step))
+            if utilization >= 1.0 and self._rng.random() > self.chance_down:
+                size = current + step
+            else:
+                size = current + self._rng.choice((-1, 1)) * step
+            mode = "explore"
+        else:
+            best = max(self.perf_log.items(), key=lambda kv: kv[1])[0]
+            if best == current:
+                size, mode = current, "hold"
+            else:
+                size = current + max(1, abs(best - current) // 2) * (
+                    1 if best > current else -1)
+                mode = "optimize"
+        size = min(self.upper, max(self.lower, size))
+        self.history.append(ResizeDecision(size, mode, throughput))
+        return size

@@ -1,0 +1,86 @@
+"""FeedRouter — the paper's SQS Queue Pull Logic, verbatim:
+
+  a. aims for a certain OPTIMAL number of items in the worker-pool mailbox
+  b. after a configurable number are PROCESSED, triggers a fetch
+  c. a configurable TIMEOUT triggers a fetch anyway
+  d. in both cases replenishes the buffer to the optimum size
+  e. tracks mailbox size, last replenishment time, and items processed
+     since the last replenishment
+
+Messages are pulled from TWO queues — the priority queue first (newly
+added feeds), then the main queue — and pushed into the worker mailbox.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.queues import BoundedPriorityQueue, Message
+
+
+@dataclass
+class RouterStats:
+    replenishments: int = 0
+    count_triggers: int = 0
+    timeout_triggers: int = 0
+    pulled_priority: int = 0
+    pulled_main: int = 0
+
+
+class FeedRouter:
+    def __init__(self, main_queue: BoundedPriorityQueue,
+                 priority_queue: BoundedPriorityQueue,
+                 mailbox: BoundedPriorityQueue, *,
+                 optimal_size: int = 256,
+                 replenish_after: int = 64,
+                 replenish_timeout_s: float = 1.0):
+        self.main_queue = main_queue
+        self.priority_queue = priority_queue
+        self.mailbox = mailbox
+        self.optimal_size = optimal_size
+        self.replenish_after = replenish_after
+        self.replenish_timeout_s = replenish_timeout_s
+        # (e) programmatic tracking
+        self.processed_since_replenish = 0
+        self.last_replenish_at = 0.0
+        self.stats = RouterStats()
+
+    # workers call this after finishing an item
+    def on_processed(self, n: int = 1) -> None:
+        self.processed_since_replenish += n
+
+    def maybe_replenish(self, now: float) -> int:
+        """Apply triggers (b), (c), and the low-watermark implied by (a)
+        ("aims for keeping a certain optimal number of items in the
+        worker-pool mailbox"); returns number of items pulled."""
+        count_hit = self.processed_since_replenish >= self.replenish_after
+        timeout_hit = (now - self.last_replenish_at) >= self.replenish_timeout_s
+        low_hit = len(self.mailbox) < max(1, self.optimal_size // 4)
+        if not (count_hit or timeout_hit or low_hit):
+            return 0
+        if count_hit:
+            self.stats.count_triggers += 1
+        elif timeout_hit:
+            self.stats.timeout_triggers += 1
+        return self.replenish(now)
+
+    def replenish(self, now: float) -> int:
+        """(d): refill the mailbox up to optimal_size, priority queue first."""
+        want = self.optimal_size - len(self.mailbox)
+        pulled = 0
+        if want > 0:
+            for msg in self.priority_queue.poll_batch(want):
+                self.mailbox.offer(msg)
+                pulled += 1
+                self.stats.pulled_priority += 1
+            want = self.optimal_size - len(self.mailbox)
+            if want > 0:
+                for msg in self.main_queue.poll_batch(want):
+                    self.mailbox.offer(msg)
+                    pulled += 1
+                    self.stats.pulled_main += 1
+        if pulled or self.processed_since_replenish:
+            self.stats.replenishments += 1
+            self.last_replenish_at = now
+            self.processed_since_replenish = 0
+        return pulled

@@ -1,0 +1,51 @@
+"""Multi-channel distribution sinks (the paper's Elasticsearch + delivery
+channels).  ``IndexSink`` is the in-memory ES stand-in; ``JsonlSink``
+persists to disk; ``TokenSink`` feeds the training data pipeline."""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import threading
+from typing import Dict, List, Optional
+
+
+class IndexSink:
+    """In-memory inverted index (Elasticsearch analogue)."""
+
+    def __init__(self):
+        self._docs: Dict[str, dict] = {}
+        self._terms: Dict[str, set] = collections.defaultdict(set)
+        self._lock = threading.Lock()
+        self.indexed = 0
+
+    def index(self, doc_id: str, doc: dict) -> None:
+        with self._lock:
+            self._docs[doc_id] = doc
+            for term in str(doc.get("title", "")).split():
+                self._terms[term.lower()].add(doc_id)
+            self.indexed += 1
+
+    def search(self, term: str) -> List[dict]:
+        with self._lock:
+            return [self._docs[d] for d in self._terms.get(term.lower(), ())]
+
+    def __len__(self) -> int:
+        return len(self._docs)
+
+
+class JsonlSink:
+    def __init__(self, path: str):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self.path = path
+        self._fh = open(path, "a", encoding="utf-8")
+        self._lock = threading.Lock()
+        self.written = 0
+
+    def index(self, doc_id: str, doc: dict) -> None:
+        with self._lock:
+            self._fh.write(json.dumps({"_id": doc_id, **doc}) + "\n")
+            self.written += 1
+
+    def close(self) -> None:
+        self._fh.close()

@@ -1,0 +1,120 @@
+"""Simulated multi-source feeds (offline stand-in for live RSS / Facebook
+/ Twitter endpoints).
+
+Each source is a seeded generator producing "documents" on its own
+schedule, with realistic behaviours the Worker must handle (paper):
+  * conditional GET: unchanged feeds return NOT_MODIFIED (matching eTag)
+  * redirects (one extra hop)
+  * duplicates (syndicated items shared across sources)
+  * malformed documents (parse failures -> dead letters)
+  * diurnal periodicity in publish rate (the Fig-4 periodicity trends)
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+import random
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.registry import StreamSource
+
+NOT_MODIFIED = "not_modified"
+REDIRECT = "redirect"
+OK = "ok"
+
+_WORDS = (
+    "market news alert update report breaking global local tech sports "
+    "science health economy election storm earnings launch study race "
+    "deal vote court data strike rally quake fire flood win loss open"
+).split()
+
+
+@dataclass
+class FeedItem:
+    guid: str
+    title: str
+    body: str
+    published_at: float
+    malformed: bool = False
+
+
+@dataclass
+class FetchResult:
+    status: str                   # ok | not_modified | redirect
+    items: List[FeedItem] = field(default_factory=list)
+    etag: Optional[str] = None
+    last_modified: Optional[float] = None
+    redirected_from: Optional[str] = None
+
+
+class SourceSimulator:
+    """Deterministic feed content for any (source, time) pair."""
+
+    def __init__(self, *, base_rate_per_hour: float = 2.0,
+                 dup_fraction: float = 0.05,
+                 malformed_fraction: float = 0.01,
+                 redirect_fraction: float = 0.02,
+                 seed: int = 0):
+        self.base_rate = base_rate_per_hour
+        self.dup_fraction = dup_fraction
+        self.malformed_fraction = malformed_fraction
+        self.redirect_fraction = redirect_fraction
+        self.seed = seed
+
+    def _rng(self, src: StreamSource, bucket: int) -> random.Random:
+        return random.Random((self.seed << 40) ^ (src.seed << 20) ^ bucket)
+
+    def _rate(self, src: StreamSource, t: float) -> float:
+        """Diurnal publish rate: quiet nights, busy middays (Fig 4)."""
+        hour = (t / 3600.0) % 24.0
+        diurnal = 0.35 + 0.65 * max(0.0, math.sin((hour - 5.0) / 24.0 * 2 * math.pi))
+        burst = 1.0 + 0.3 * math.sin(src.seed % 97 + hour)
+        return self.base_rate * diurnal * max(0.1, burst)
+
+    def fetch(self, src: StreamSource, now: float,
+              etag: Optional[str] = None) -> FetchResult:
+        """Fetch items published in (last_modified, now]."""
+        since = src.last_modified or (now - src.interval_s)
+        bucket0 = int(since // 3600)
+        bucket1 = int(now // 3600)
+        items: List[FeedItem] = []
+        for b in range(bucket0, bucket1 + 1):
+            rng = self._rng(src, b)
+            n = rng.poissonvariate(self._rate(src, b * 3600.0)) \
+                if hasattr(rng, "poissonvariate") else self._poisson(rng, self._rate(src, b * 3600.0))
+            for i in range(n):
+                t = b * 3600.0 + rng.random() * 3600.0
+                if not (since < t <= now):
+                    continue
+                if rng.random() < self.dup_fraction:
+                    guid = f"syndicated-{b}-{i % 7}"       # shared across sources
+                else:
+                    guid = f"{src.sid}-{b}-{i}"
+                title = " ".join(rng.choices(_WORDS, k=6))
+                body = " ".join(rng.choices(_WORDS, k=60))
+                items.append(FeedItem(
+                    guid=guid, title=title, body=body, published_at=t,
+                    malformed=rng.random() < self.malformed_fraction,
+                ))
+        new_etag = hashlib.md5(
+            f"{src.sid}:{len(items)}:{int(now // src.interval_s)}".encode()
+        ).hexdigest()
+        if not items and etag is not None:
+            return FetchResult(NOT_MODIFIED, etag=etag, last_modified=since)
+        rng = self._rng(src, int(now))
+        status = REDIRECT if rng.random() < self.redirect_fraction else OK
+        return FetchResult(status, items=items, etag=new_etag,
+                           last_modified=now,
+                           redirected_from=src.url if status == REDIRECT else None)
+
+    @staticmethod
+    def _poisson(rng: random.Random, lam: float) -> int:
+        # Knuth; lam is small (items/hour)
+        L = math.exp(-lam)
+        k, p = 0, 1.0
+        while True:
+            p *= rng.random()
+            if p <= L:
+                return k
+            k += 1

@@ -1,0 +1,2 @@
+from repro.data.tokenizer import HashTokenizer
+from repro.data.stream_pipeline import StreamDataPipeline, StreamDataConfig

@@ -1,0 +1,100 @@
+"""StreamDataPipeline — AlertMix as the training data plane.
+
+The thousands of "news feeds" become corpus shards; the AlertMix pipeline
+(scheduler -> priority queues -> FeedRouter -> balancing pool -> dedup)
+ingests documents which are tokenized and PACKED into fixed-length
+samples.  The train loop pulls batches; backpressure is physical: the
+pipeline is only stepped while the bounded sample buffer has room.
+
+Restart safety: ``state()`` captures the registry snapshot + packing
+remainder + sample buffer; restoring replays nothing and loses nothing
+that was checkpointed (at-least-once upstream, exactly-once into batches
+relative to a checkpoint).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.pipeline import AlertMixPipeline, PipelineConfig
+from repro.data.tokenizer import HashTokenizer
+
+
+@dataclass
+class StreamDataConfig:
+    num_sources: int = 512
+    seq_len: int = 512
+    vocab_size: int = 50_304
+    buffer_samples: int = 2048       # bounded sample buffer (backpressure)
+    feed_interval_s: float = 60.0
+    virtual_dt: float = 1.0
+
+
+class StreamDataPipeline:
+    def __init__(self, cfg: StreamDataConfig, *, seed: int = 0):
+        self.cfg = cfg
+        self.tokenizer = HashTokenizer(cfg.vocab_size)
+        self._buffer: Deque[np.ndarray] = collections.deque()
+        self._remainder: List[int] = []
+        self.samples_emitted = 0
+        self.docs_consumed = 0
+        self.pipeline = AlertMixPipeline(
+            PipelineConfig(
+                num_sources=cfg.num_sources,
+                feed_interval_s=cfg.feed_interval_s,
+                pick_interval_s=min(5.0, cfg.feed_interval_s / 4),
+            ),
+            seed=seed,
+            sinks=[],                       # tokens are the only sink
+            item_hook=self._on_doc,
+        )
+
+    # ---- document -> packed samples ----------------------------------------
+    def _on_doc(self, doc: dict) -> None:
+        self.docs_consumed += 1
+        ids = self.tokenizer.encode(doc["title"] + " " + doc["body"])
+        self._remainder.extend(ids)
+        s = self.cfg.seq_len
+        while len(self._remainder) >= s:
+            self._buffer.append(np.asarray(self._remainder[:s], np.int32))
+            del self._remainder[:s]
+            self.samples_emitted += 1
+
+    # ---- batch interface -----------------------------------------------------
+    def next_batch(self, batch_size: int, max_virtual_s: float = 1e7
+                   ) -> Dict[str, np.ndarray]:
+        """Blocks (advances virtual time) until a full batch is buffered.
+        Backpressure: the pipeline only steps while the buffer has room."""
+        waited = 0.0
+        while len(self._buffer) < batch_size:
+            if len(self._buffer) >= self.cfg.buffer_samples:
+                break                        # buffer full: stop ingesting
+            self.pipeline.step(self.cfg.virtual_dt)
+            waited += self.cfg.virtual_dt
+            if waited > max_virtual_s:
+                raise TimeoutError(
+                    f"pipeline produced {len(self._buffer)}/{batch_size} "
+                    f"samples in {waited}s virtual")
+        tokens = np.stack([self._buffer.popleft() for _ in range(batch_size)])
+        return {"tokens": tokens}
+
+    # ---- checkpointable state -------------------------------------------------
+    def state(self) -> dict:
+        return {
+            "pipeline": self.pipeline.snapshot(),
+            "remainder": list(self._remainder),
+            "buffer": [b.tolist() for b in self._buffer],
+            "samples_emitted": self.samples_emitted,
+            "docs_consumed": self.docs_consumed,
+        }
+
+    def load_state(self, st: dict) -> None:
+        self.pipeline.restore_registry(st["pipeline"])
+        self._remainder = list(st["remainder"])
+        self._buffer = collections.deque(
+            np.asarray(b, np.int32) for b in st["buffer"])
+        self.samples_emitted = st["samples_emitted"]
+        self.docs_consumed = st["docs_consumed"]

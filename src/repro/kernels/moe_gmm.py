@@ -1,0 +1,84 @@
+"""Ragged grouped matmul kernel for MoE expert FFNs (TPU Pallas).
+
+Computes o[e] = x[e] @ w[e] for every expert, SKIPPING capacity tiles
+beyond each expert's real token count (per-expert counts live in SMEM) —
+the TPU analogue of MegaBlocks' block-sparse grouped GEMM.  The d
+(contraction) axis is the grid's last (sequential) dimension with an f32
+VMEM accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(counts_ref, x_ref, w_ref, o_ref, acc_scr, *,
+            block_c: int, n_d_blocks: int):
+    e = pl.program_id(0)
+    ci = pl.program_id(1)
+    dk = pl.program_id(3)
+
+    @pl.when(dk == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    live = ci * block_c < counts_ref[e]       # ragged skip
+
+    @pl.when(live)
+    def _mm():
+        x = x_ref[0]                          # (bc, bd)
+        w = w_ref[0]                          # (bd, bf)
+        acc_scr[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(dk == n_d_blocks - 1)
+    def _write():
+        # per-ROW ragged mask (partial blocks zero their tail rows)
+        rows = ci * block_c + jax.lax.broadcasted_iota(
+            jnp.int32, acc_scr.shape, 0)
+        valid = rows < counts_ref[e]
+        o_ref[0] = jnp.where(valid, acc_scr[...], 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_c", "block_d", "block_f", "interpret"),
+)
+def moe_gmm(
+    x: jax.Array,        # (E, C, d)
+    w: jax.Array,        # (E, d, f)
+    counts: jax.Array,   # (E,) int32 — valid rows per expert
+    *,
+    block_c: int = 128,
+    block_d: int = 512,
+    block_f: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    e, c, d = x.shape
+    f = w.shape[-1]
+    block_c = min(block_c, c)
+    block_d = min(block_d, d)
+    block_f = min(block_f, f)
+    assert c % block_c == 0 and d % block_d == 0 and f % block_f == 0
+    grid = (e, c // block_c, f // block_f, d // block_d)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_c=block_c, n_d_blocks=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # counts, whole array
+            pl.BlockSpec((1, block_c, block_d), lambda e, ci, fj, dk: (e, ci, dk)),
+            pl.BlockSpec((1, block_d, block_f), lambda e, ci, fj, dk: (e, dk, fj)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ci, fj, dk: (e, ci, fj)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(counts, x, w)
+    return out

@@ -1,0 +1,49 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU and are validated by executing their bodies in
+interpret mode).  On a TPU backend the same calls compile natively.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.ssd_scan import ssd_scan_fwd
+from repro.kernels.token_hash import token_window_hash
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=256,
+                    block_k=256, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=interpret)
+
+
+def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk=256, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return ssd_scan_fwd(x, dt, a, b_mat, c_mat, chunk=chunk,
+                        interpret=interpret)
+
+
+def grouped_matmul(x, w, counts, *, block_c=128, block_d=512, block_f=512,
+                   interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return moe_gmm(x, w, counts, block_c=block_c, block_d=block_d,
+                   block_f=block_f, interpret=interpret)
+
+
+def window_hash(tokens, *, window=64, block_b=8, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return token_window_hash(tokens, window=window, block_b=block_b,
+                             interpret=interpret)

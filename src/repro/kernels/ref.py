@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import reference_attention, repeat_kv
+from repro.models.ssd import ssd_reference
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """(B,S,Hq,D) x (B,S,Hkv,D): GQA handled by kv repetition."""
+    n_rep = q.shape[2] // k.shape[2]
+    return reference_attention(
+        q, repeat_kv(k, n_rep), repeat_kv(v, n_rep),
+        causal=causal, window=window)
+
+
+def ssd_ref(x, dt, a, b_mat, c_mat):
+    y, _ = ssd_reference(x, dt, a, b_mat, c_mat)
+    return y
+
+
+def moe_gmm_ref(x, w, counts):
+    """o[e, :counts[e]] = x[e, :counts[e]] @ w[e]; zero beyond counts."""
+    o = jnp.einsum("ecd,edf->ecf", x, w)
+    c = x.shape[1]
+    mask = jnp.arange(c)[None, :, None] < counts[:, None, None]
+    return jnp.where(mask, o, 0).astype(x.dtype)
+
+
+def token_window_hash_ref(tokens, *, window=64):
+    P = np.uint32(1_000_003)
+    SALT = np.uint32(0x9E3779B9)
+    t = np.asarray(tokens).astype(np.uint32)
+    b, s = t.shape
+    nw = s // window
+    out = np.zeros((b, nw), np.uint32)
+    with np.errstate(over="ignore"):
+        for wi in range(nw):
+            h = np.zeros(b, np.uint32)
+            for j in range(window):
+                h = h * P + t[:, wi * window + j] + SALT
+            out[:, wi] = h
+    return jnp.asarray(out)

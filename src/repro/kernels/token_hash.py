@@ -1,0 +1,64 @@
+"""On-device token-window hashing for the AlertMix dedup stage.
+
+The paper's Worker "checks for duplicate entries already in the system";
+at training-data scale that check moves on-device: every sample gets a
+polynomial rolling hash per window of `window` tokens, and the host
+dedups samples whose window-hash multiset collides.  One grid step hashes
+one batch row block; the sequential loop over windows runs on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# python ints (NOT jnp scalars: pallas kernels may not capture arrays)
+_P = 1_000_003                    # polynomial base
+_SALT = 0x9E3779B9
+
+
+def _kernel(t_ref, o_ref, *, window: int, n_windows: int):
+    toks = t_ref[...].astype(jnp.uint32)      # (bb, S)
+    bb = toks.shape[0]
+
+    def hash_window(wi, out):
+        seg = jax.lax.dynamic_slice_in_dim(toks, wi * window, window, axis=1)
+
+        def step(j, h):
+            return h * jnp.uint32(_P) + seg[:, j] + jnp.uint32(_SALT)
+
+        h = jax.lax.fori_loop(0, window, step, jnp.zeros((bb,), jnp.uint32))
+        return jax.lax.dynamic_update_slice_in_dim(
+            out, h[:, None], wi, axis=1)
+
+    out = jax.lax.fori_loop(
+        0, n_windows, hash_window, jnp.zeros((bb, n_windows), jnp.uint32))
+    o_ref[...] = out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_b", "interpret"),
+)
+def token_window_hash(
+    tokens: jax.Array,   # (B, S) int32
+    *,
+    window: int = 64,
+    block_b: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s = tokens.shape
+    assert s % window == 0
+    n_windows = s // window
+    block_b = min(block_b, b)
+    assert b % block_b == 0
+
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window, n_windows=n_windows),
+        grid=(b // block_b,),
+        in_specs=[pl.BlockSpec((block_b, s), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, n_windows), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_windows), jnp.uint32),
+        interpret=interpret,
+    )(tokens)

@@ -1,0 +1,327 @@
+import os
+# 512 placeholder devices for the production mesh; LICM disabled because
+# XLA:CPU computes bf16 dots via f32 converts and LICM hoists those
+# per-layer converts into FULL-STACK f32 copies of every scanned weight
+# (a CPU-only artifact — TPU's MXU consumes bf16 natively, nothing to
+# hoist). See DESIGN.md §Hardware-adaptation.
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402  (the env flag MUST precede every jax-importing module)
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SHAPES, OptimizerConfig, shape_supported
+from repro.configs import ARCH_IDS, get_arch
+from repro.dist import sharding as shlib
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh, mesh_config
+from repro.models.model import HybridModel, build_model
+from repro.train.step import (
+    init_opt_state,
+    make_grad_step,
+    make_train_step,
+    make_update_step,
+)
+from repro.analysis import roofline as R
+
+V5E_HBM = 16 * 1024**3
+
+
+def kernel_adjustment(cfg, shape, par, mesh) -> float:
+    """Analytic HBM-bytes/device saved by the Pallas kernels on real TPU.
+
+    The XLA fallback materializes attention score tiles (flash) and SSD
+    decay tiles (ssd_scan) in HBM between dots; the kernels keep them in
+    VMEM.  The dry-run runs the XLA path (Pallas cannot lower on the CPU
+    backend), so the roofline reports BOTH the measured memory term and a
+    kernel-adjusted one with this traffic subtracted.  Per tile element
+    we charge write+read of the f32 score + the bf16 probs (~12 B) per
+    pass; train ≈ 4 passes (fwd, remat-fwd, bwd wrt 2 operands),
+    prefill = 1.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bd = sizes.get("pod", 1) * sizes.get("data", 1)
+    n_model = sizes.get("model", 1)
+    if shape.kind == "decode":
+        return 0.0  # decode reads the KV cache for real; nothing to adjust
+    passes = 4 if shape.kind == "train" else 1
+    mb = max(1, par.microbatches) if shape.kind == "train" else 1
+    b_loc = max(1, shape.global_batch // mb // bd)
+    bytes_per_elem = 12.0
+
+    # NOTE: attention-tile traffic is MEASURED (the walker skips the
+    # chunk-pair scan loops — see attention_kernel_trips); only the SSD
+    # decay tiles, which are materialized outside any loop, use this
+    # analytic estimate.
+    total = 0.0
+    if cfg.ssm is not None:
+        s = shape.seq_len
+        q = min(cfg.ssm.chunk_size, s)
+        nc = s // q
+        d_in = cfg.ssm.expand * cfg.d_model
+        h_loc = max(1, (d_in // cfg.ssm.head_dim) // n_model)
+        total += (b_loc * nc * q * q * h_loc * bytes_per_elem
+                  * passes * cfg.n_layers * mb)
+    return total
+
+
+def attention_kernel_trips(cfg, shape) -> frozenset:
+    """Trip counts of the chunked-attention pair scans (what the Pallas
+    flash kernel fuses on TPU)."""
+    if cfg.attention_free or shape.kind == "decode":
+        return frozenset()
+    s = shape.seq_len
+    if cfg.frontend.kind == "patch" and shape.kind == "train":
+        s = shape.seq_len  # patches included in seq budget already
+    c = min(cfg.attn_chunk, s)
+    n = max(1, s // c)
+    pairs = n * (n + 1) // 2 if cfg.causal else n * n
+    return frozenset({pairs})
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             parallel_override: Optional[dict] = None) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    spec = get_arch(arch_id)
+    cfg = spec.model
+    shape = SHAPES[shape_name]
+    ok, reason = shape_supported(cfg, shape)
+    rec = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    par = spec.parallel[shape_name]
+    if parallel_override:
+        import dataclasses
+        par = dataclasses.replace(par, **parallel_override)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if par.model_axis_role == "dp" and shape.global_batch % mesh.devices.size:
+        # DP-over-model needs the batch to cover every device; otherwise
+        # (e.g. batch 256 on the 512-chip multi-pod mesh) fall back to TP
+        import dataclasses
+        par = dataclasses.replace(par, model_axis_role="tp")
+    mcfg = mesh_config(multi_pod=multi_pod)
+    model = build_model(cfg)
+    window = cfg.hybrid_attn_window if (
+        isinstance(model, HybridModel) and shape_name == "long_500k") else 0
+
+    t0 = time.time()
+    extra_lowered = []
+    resident = 0
+    with mesh, shlib.use_mesh(mesh, mcfg, par):
+        p_structs, p_specs, p_sh = S.param_shardings(model, mesh, par)
+
+        if shape.kind == "train":
+            ocfg = OptimizerConfig()
+            o_structs, o_sh = S.opt_shardings(p_structs, p_specs, mesh, ocfg, par)
+            b_structs, b_sh = S.input_specs(cfg, shape, mesh)
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            bd = sizes.get("pod", 1) * sizes.get("data", 1)
+            if par.offload_optimizer:
+                # split train step: backprop and optimizer update are
+                # separate programs; peak HBM = max of the two phases
+                # (+ the idle opt state resident during phase 1)
+                import numpy as _np
+                resident = sum(
+                    int(_np.prod(s.shape)) * s.dtype.itemsize
+                    for s in jax.tree.leaves(
+                        jax.eval_shape(lambda p: init_opt_state(p, OptimizerConfig(), par), p_structs))
+                ) // mesh.devices.size
+                gstep = make_grad_step(model, par, batch_shards=bd,
+                                       param_pspecs=p_specs)
+                lowered = jax.jit(gstep, in_shardings=(p_sh, b_sh)).lower(
+                    p_structs, b_structs)
+                g_structs = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(
+                        s.shape, jnp.dtype(par.grad_accum_dtype)),
+                    p_structs)
+                ustep = make_update_step(ocfg, par)
+                extra_lowered.append(jax.jit(
+                    ustep, in_shardings=(p_sh, o_sh, p_sh),
+                    donate_argnums=(0, 1, 2),
+                ).lower(p_structs, o_structs, g_structs))
+            else:
+                step = make_train_step(model, ocfg, par, batch_shards=bd,
+                                       param_pspecs=p_specs)
+                lowered = jax.jit(
+                    step, in_shardings=(p_sh, o_sh, b_sh), donate_argnums=(0, 1)
+                ).lower(p_structs, o_structs, b_structs)
+        elif shape.kind == "prefill":
+            b_structs, b_sh = S.input_specs(cfg, shape, mesh)
+            fn = lambda p, b: model.prefill(p, b, window=window)
+            lowered = jax.jit(fn, in_shardings=(p_sh, b_sh)).lower(
+                p_structs, b_structs)
+        else:  # decode
+            c_structs, c_sh = S.cache_specs(model, cfg, shape, mesh, par,
+                                            window=window)
+            t_structs, t_sh = S.decode_token_specs(shape, mesh)
+            fn = lambda p, c, t: model.decode_step(p, c, t)
+            lowered = jax.jit(
+                fn, in_shardings=(p_sh, c_sh, t_sh), donate_argnums=(1,)
+            ).lower(p_structs, c_structs, t_structs)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        extra_compiled = [lo.compile() for lo in extra_lowered]
+        t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    ktrips = attention_kernel_trips(cfg, shape)
+    cost = R.walk(txt)
+    cost_k = R.walk(txt, kernel_trips=ktrips)      # flash-kernel view
+    phase_peaks = []
+    for ec in extra_compiled:
+        # costs of extra phases add; peak memory takes the max phase
+        etxt = ec.as_text()
+        c2 = R.walk(etxt)
+        c2k = R.walk(etxt, kernel_trips=ktrips)
+        for c_dst, c_src in ((cost, c2), (cost_k, c2k)):
+            c_dst.flops += c_src.flops
+            c_dst.bytes += c_src.bytes
+            c_dst.coll_bytes_tpu += c_src.coll_bytes_tpu
+            for k, v in c_src.coll_by_type.items():
+                c_dst.coll_by_type[k] = c_dst.coll_by_type.get(k, 0.0) + v
+                c_dst.coll_bytes += v
+        m2 = ec.memory_analysis()
+        phase_peaks.append(
+            m2.argument_size_in_bytes + m2.temp_size_in_bytes
+            + max(0, m2.output_size_in_bytes - m2.alias_size_in_bytes))
+    terms = R.roofline_terms(cost)
+
+    num_dev = mesh.devices.size
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+    else:
+        tokens = shape.global_batch  # one new token per sequence
+    mf_dev = R.model_flops_per_device(n_active, tokens, shape.kind, num_dev)
+    frac = R.roofline_fraction(mf_dev, terms)
+
+    # TPU-adjusted terms: the kernel-view walk drops the attention-tile
+    # traffic the Pallas flash kernel keeps in VMEM (measured, by skipping
+    # the pair-scan loop bodies), the SSD decay tiles are subtracted
+    # analytically, and f32-promoted activation collectives are charged at
+    # their native bf16 width
+    saved = kernel_adjustment(cfg, shape, par, mesh) + max(
+        0.0, cost.bytes - cost_k.bytes)
+    adj_bytes = max(0.0, cost.bytes - saved)
+    adj = dict(terms)
+    adj["t_memory_s"] = adj_bytes / R.HBM_BW
+    adj["t_collective_s"] = cost.coll_bytes_tpu / R.ICI_BW
+    adj["dominant"] = max(
+        ("compute", adj["t_compute_s"]), ("memory", adj["t_memory_s"]),
+        ("collective", adj["t_collective_s"]), key=lambda kv: kv[1])[0]
+    frac_adj = R.roofline_fraction(mf_dev, adj)
+
+    arg_b = ma.argument_size_in_bytes
+    temp_b = ma.temp_size_in_bytes
+    out_extra = max(0, ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    peak = max([arg_b + temp_b + out_extra + resident] + phase_peaks)
+    rec.update(
+        status="ok",
+        lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+        bytes_per_device={
+            "arguments": arg_b, "temp": temp_b, "output_nonaliased": out_extra,
+            "peak": peak, "fits_16GiB": bool(peak <= V5E_HBM),
+        },
+        hlo={
+            "flops_per_device": cost.flops,
+            "bytes_per_device": cost.bytes,
+            "collective_bytes_per_device": cost.coll_bytes,
+            "collective_by_type": cost.coll_by_type,
+            "unknown_trip_loops": cost.unknown_trip_loops,
+            "xla_cost_analysis_flops": ca.get("flops", -1.0),
+        },
+        roofline={
+            **{k: v for k, v in terms.items()},
+            "model_flops_per_device": mf_dev,
+            "useful_flops_ratio": (mf_dev / cost.flops) if cost.flops else 0.0,
+            "roofline_fraction": frac,
+            "kernel_adjusted": {
+                "saved_bytes": saved,
+                "t_memory_s": adj["t_memory_s"],
+                "t_collective_s": adj["t_collective_s"],
+                "dominant": adj["dominant"],
+                "roofline_fraction": frac_adj,
+            },
+        },
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}.{shape}.{'multi' if mp else 'single'}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            rec = run_cell(arch, shape, mp)
+        except Exception as e:  # a failed cell is a bug — record it loudly
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "multi" if mp else "single",
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skipped"
+        n_err += st == "error"
+        extra = ""
+        if st == "ok":
+            r = rec["roofline"]
+            extra = (f"compile={rec['compile_s']}s dom={r['dominant']} "
+                     f"frac={r['roofline_fraction']:.3f} "
+                     f"peak={rec['bytes_per_device']['peak']/2**30:.1f}GiB"
+                     f"{' FITS' if rec['bytes_per_device']['fits_16GiB'] else ' OVER'}")
+        elif st == "skipped":
+            extra = rec["reason"][:60]
+        else:
+            extra = rec["error"][:90]
+        print(f"[{st:7s}] {tag:45s} {extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} error={n_err}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,174 @@
+"""Input/parameter/cache ShapeDtypeStructs + shardings for every
+(arch x shape x mesh) cell — the dry-run lowers against these; nothing is
+allocated.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import (
+    MeshConfig,
+    ModelConfig,
+    OptimizerConfig,
+    ParallelConfig,
+    ShapeConfig,
+)
+from repro.dist import sharding as shlib
+from repro.models.model import BaseModel, HybridModel
+from repro.models.param import pspec_tree, shape_structs
+from repro.train.step import init_opt_state
+
+
+def _ns(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def param_shardings(model: BaseModel, mesh: Mesh, parallel: ParallelConfig):
+    defs = model.param_defs()
+    structs = shape_structs(defs)
+    resolve = lambda ax, size: shlib.resolve_axis(ax, size, mesh, parallel)
+    specs = pspec_tree(defs, resolve)
+    shardings = jax.tree.map(
+        lambda s: _ns(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    return structs, specs, shardings
+
+
+def opt_shardings(param_structs, param_specs, mesh: Mesh,
+                  ocfg: OptimizerConfig, parallel: ParallelConfig):
+    """Structs + shardings for the optimizer state (adamw or adafactor)."""
+    structs = jax.eval_shape(
+        lambda p: init_opt_state(p, ocfg, parallel), param_structs
+    )
+
+    flat_specs = {
+        tuple(k.key for k in kp): v
+        for kp, v in jax.tree_util.tree_flatten_with_path(
+            param_specs, is_leaf=lambda x: isinstance(x, P)
+        )[0]
+    }
+
+    def spec_for(path: Tuple[str, ...], st) -> P:
+        # path like ("m", ...param path) or ("v", ...path, "vr")
+        if path == ("count",):
+            return P()
+        if path[0] in ("m", "v") and path[-1] not in ("vr", "vc", "v"):
+            base = flat_specs.get(path[1:])
+            if base is not None:
+                return base
+        # adafactor: ("v", *ppath, "vr"|"vc"|"v")
+        base = flat_specs.get(path[1:-1])
+        if base is None:
+            return P()
+        if path[-1] == "vr":
+            return P(*base[:-1])
+        if path[-1] == "vc":
+            return P(*(tuple(base[:-2]) + (base[-1],)))
+        if path[-1] == "v":
+            return base
+        return P()
+
+    def build(tree):
+        leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+        flat = {}
+        for kp, st in leaves:
+            path = tuple(k.key for k in kp)
+            flat[path] = spec_for(path, st)
+        # rebuild with same treedef
+        treedef = jax.tree_util.tree_structure(tree)
+        ordered = [flat[tuple(k.key for k in kp)] for kp, _ in leaves]
+        return jax.tree_util.tree_unflatten(treedef, ordered)
+
+    specs = build(structs)
+    shardings = jax.tree.map(
+        lambda s: _ns(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    return structs, shardings
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                ) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, NamedSharding]]:
+    """Model inputs for one workload shape (train/prefill batches)."""
+    g = shape.global_batch
+    s = shape.seq_len
+    baxes = shlib.resolve_axis("batch", g, mesh)   # divisibility-guarded
+    bspec = P(baxes, None)
+    b2 = lambda nd: _ns(mesh, P(baxes, *([None] * nd)))
+
+    structs: Dict[str, Any] = {}
+    shardings: Dict[str, Any] = {}
+    if cfg.frontend.kind == "frame":
+        structs["frame_embeds"] = jax.ShapeDtypeStruct(
+            (g, s, cfg.frontend.embed_dim), jnp.bfloat16)
+        structs["labels"] = jax.ShapeDtypeStruct((g, s), jnp.int32)
+        structs["mask"] = jax.ShapeDtypeStruct((g, s), jnp.bool_)
+        shardings = {"frame_embeds": b2(2), "labels": b2(1), "mask": b2(1)}
+        return structs, shardings
+    if cfg.frontend.kind == "patch":
+        p = cfg.frontend.num_positions
+        structs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (g, p, cfg.frontend.embed_dim), jnp.bfloat16)
+        structs["tokens"] = jax.ShapeDtypeStruct((g, s - p), jnp.int32)
+        shardings = {"patch_embeds": b2(2), "tokens": b2(1)}
+        return structs, shardings
+    structs["tokens"] = jax.ShapeDtypeStruct((g, s), jnp.int32)
+    shardings["tokens"] = _ns(mesh, bspec)
+    return structs, shardings
+
+
+def cache_specs(model: BaseModel, cfg: ModelConfig, shape: ShapeConfig,
+                mesh: Mesh, parallel: ParallelConfig, *, window: int = 0):
+    """Decode-cache structs + shardings (donated input of serve_step)."""
+    kwargs = {}
+    if isinstance(model, HybridModel):
+        kwargs["window"] = window
+    structs = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, **kwargs)
+    )
+    resolve = lambda ax, size: shlib.resolve_axis(ax, size, mesh, parallel)
+
+    kv_seq = "kv_seq" if parallel.decode_cache_shard == "seq" else None
+    kv_heads = "heads" if parallel.decode_cache_shard == "heads" else None
+
+    def spec_for(path, st) -> P:
+        name = path[-1]
+        if name == "pos":
+            return P(resolve("batch", st.shape[0]))
+        if name in ("k", "v"):
+            b = resolve("batch", st.shape[1])
+            return P(None, b, resolve(kv_seq, st.shape[2]) if kv_seq else None,
+                     resolve(kv_heads, st.shape[3]) if kv_heads else None, None)
+        if name == "ssm":
+            # (..., B, H, P, N)
+            nb = st.ndim - 4
+            b = resolve("batch", st.shape[-4])
+            h = resolve("ssm_heads", st.shape[-3])
+            return P(*([None] * nb), b, h, None, None)
+        if name in ("x", "B", "C"):  # conv tails (..., B, W-1, C)
+            nb = st.ndim - 3
+            b = resolve("batch", st.shape[-3])
+            c = resolve("d_inner", st.shape[-1]) if name == "x" else None
+            return P(*([None] * nb), b, None, c)
+        return P()
+
+    leaves = jax.tree_util.tree_flatten_with_path(structs)[0]
+    treedef = jax.tree_util.tree_structure(structs)
+    specs = jax.tree_util.tree_unflatten(
+        treedef,
+        [spec_for(tuple(k.key for k in kp), st) for kp, st in leaves],
+    )
+    shardings = jax.tree.map(
+        lambda s: _ns(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    return structs, shardings
+
+
+def decode_token_specs(shape: ShapeConfig, mesh: Mesh):
+    structs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    baxes = shlib.resolve_axis("batch", shape.global_batch, mesh)
+    shardings = _ns(mesh, P(baxes, None))
+    return structs, shardings

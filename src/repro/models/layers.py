@@ -1,0 +1,299 @@
+"""Shared neural layers: RMSNorm, RoPE, chunked flash attention (jnp),
+decode attention, SwiGLU MLP.
+
+The training/prefill attention is a *triangle-pair scan*: the (q-chunk,
+kv-chunk) pairs that actually need computing (lower triangle for causal,
+band for sliding-window, full grid for encoders) are enumerated at trace
+time and processed by a single ``lax.scan`` with an online-softmax carry.
+This computes exactly the useful FLOPs (no 2x causal masking waste), keeps
+HLO size O(1) in sequence length, and is the pure-XLA mirror of the Pallas
+flash-attention kernel in ``repro.kernels.flash_attention``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_inv_freq(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_inv_freq(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D)."""
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+# ---------------------------------------------------------------------------
+# Triangle-pair-scan flash attention (pure jnp / XLA)
+# ---------------------------------------------------------------------------
+
+
+def _pairs(n: int, causal: bool, window_chunks: Optional[int]) -> np.ndarray:
+    out = []
+    for i in range(n):
+        lo = 0 if window_chunks is None else max(0, i - window_chunks)
+        hi = i if causal else n - 1
+        for j in range(lo, hi + 1):
+            out.append((i, j))
+    return np.asarray(out, dtype=np.int32)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention. q,k,v: (B, S, H, D) with H already equal
+    (GQA kv repeated by the caller). Returns (B, S, H, D) in q.dtype."""
+    b, s, h, d = q.shape
+    c = min(chunk, s)
+    while s % c != 0:  # smoke shapes: fall back to a divisor
+        c //= 2
+    n = s // c
+    scale = 1.0 / math.sqrt(d)
+
+    wc = None
+    if window and window > 0:
+        wc = (window + c - 1) // c
+
+    pairs = _pairs(n, causal, wc)
+    i_idx = jnp.asarray(pairs[:, 0])
+    j_idx = jnp.asarray(pairs[:, 1])
+    reset = jnp.asarray(
+        np.concatenate([[True], pairs[1:, 0] != pairs[:-1, 0]]).astype(np.bool_)
+    )
+
+    qc = q.reshape(b, n, c, h, d)
+    kc = k.reshape(b, n, c, h, d)
+    vc = v.reshape(b, n, c, h, d)
+
+    def step(carry, xs):
+        m, l, acc, out = carry
+        i, j, rst = xs
+        m = jnp.where(rst, jnp.full_like(m, _NEG_INF), m)
+        l = jnp.where(rst, jnp.zeros_like(l), l)
+        acc = jnp.where(rst, jnp.zeros_like(acc), acc)
+
+        qi = jax.lax.dynamic_index_in_dim(qc, i, axis=1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kc, j, axis=1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vc, j, axis=1, keepdims=False)
+
+        # scores: (B, H, Cq, Ck), f32
+        sco = jnp.einsum(
+            "bqhd,bkhd->bhqk", qi, kj, preferred_element_type=jnp.float32
+        ) * scale
+        qpos = i * c + jnp.arange(c)
+        kpos = j * c + jnp.arange(c)
+        mask = jnp.ones((c, c), dtype=bool)
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window and window > 0:
+            mask = mask & (qpos[:, None] - kpos[None, :] < window)
+        sco = jnp.where(mask[None, None], sco, -jnp.inf)
+
+        m_new = jnp.maximum(m, jnp.max(sco, axis=-1))          # (B,H,Cq)
+        m_new = jnp.maximum(m_new, _NEG_INF)
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(sco - m_new[..., None])                     # (B,H,Cq,Ck)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+
+        norm = acc_new / jnp.maximum(l_new, 1e-30)[..., None]   # (B,H,Cq,D)
+        norm = norm.transpose(0, 2, 1, 3).astype(out.dtype)     # (B,Cq,H,D)
+        out = jax.lax.dynamic_update_index_in_dim(out, norm, i, axis=1)
+        return (m_new, l_new, acc_new, out), None
+
+    m0 = jnp.full((b, h, c), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, c), jnp.float32)
+    acc0 = jnp.zeros((b, h, c, d), jnp.float32)
+    out0 = jnp.zeros((b, n, c, h, d), q.dtype)
+
+    (_, _, _, out), _ = jax.lax.scan(
+        step, (m0, l0, acc0, out0), (i_idx, j_idx, reset)
+    )
+    return out.reshape(b, s, h, d)
+
+
+def reference_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Naive O(S^2)-memory oracle used by tests."""
+    b, s, h, d = q.shape
+    sco = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(d)
+    qpos = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (qpos[None, :] <= qpos[:, None])
+    if window and window > 0:
+        mask = mask & (qpos[:, None] - qpos[None, :] < window)
+    sco = jnp.where(mask[None, None], sco, -jnp.inf)
+    p = jax.nn.softmax(sco, axis=-1)
+    out = jnp.einsum(
+        "bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, H, D)
+    k_cache: jax.Array,      # (B, S, Hkv, D)
+    v_cache: jax.Array,
+    length: jax.Array,       # (B,) number of valid cache positions
+    *,
+    window: int = 0,
+) -> jax.Array:
+    b, s, hkv, d = k_cache.shape
+    h = q.shape[2]
+    n_rep = h // hkv
+    kr = repeat_kv(k_cache, n_rep)
+    vr = repeat_kv(v_cache, n_rep)
+    sco = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, kr, preferred_element_type=jnp.float32
+    ) / math.sqrt(d)
+    pos = jnp.arange(s)[None, :]                 # (1, S)
+    valid = pos < length[:, None]
+    if window and window > 0:
+        valid = valid & (pos >= (length[:, None] - window))
+    sco = jnp.where(valid[:, None, None, :], sco, -jnp.inf)
+    p = jax.nn.softmax(sco, axis=-1)
+    out = jnp.einsum(
+        "bhqk,bkhd->bqhd", p.astype(vr.dtype), vr,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding lookup with a sharding-aware backward
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def embed_lookup(emb: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(emb, tokens, axis=0)
+
+
+def _embed_fwd(emb, tokens):
+    # emb rides along as a residual only for its shape/dtype (no copy)
+    return jnp.take(emb, tokens, axis=0), (tokens, emb)
+
+
+def _embed_bwd(res, g):
+    tokens, emb = res
+    eshape, edtype = emb.shape, emb.dtype
+    d = eshape[1]
+    # keep the cotangent in the param dtype and pin its d_model sharding so
+    # the scatter-add partitions on the pass-through dim (device-local);
+    # the default AD path materializes an f32 (V, d) REPLICATED scatter +
+    # all-reduce (3 GiB/device on grok-1 — EXPERIMENTS.md §Perf)
+    g = g.astype(edtype)
+    g2 = g.reshape(-1, d)
+    g2 = shard(g2, None, "embed_tp")
+    d_emb = jnp.zeros(eshape, edtype)
+    d_emb = d_emb.at[tokens.reshape(-1)].add(g2)
+    d_emb = shard(d_emb, None, "embed_tp")
+    return d_emb, None
+
+
+embed_lookup.defvjp(_embed_fwd, _embed_bwd)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("bse,ef->bsf", x, w_gate)
+    u = jnp.einsum("bse,ef->bsf", x, w_up)
+    g = shard(g, "batch", None, "ff")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fe->bse", h, w_down)
+
+
+def softmax_cross_entropy(
+    logits: jax.Array,       # (..., V) — may include padded vocab tail
+    labels: jax.Array,       # (...,) int32 < vocab_logical
+    vocab_logical: int,
+    mask: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (mean_nll, accuracy). Padded vocab entries are excluded."""
+    v = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if v > vocab_logical:
+        pad = jnp.arange(v) >= vocab_logical
+        logits = jnp.where(pad, -jnp.inf, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        denom = jnp.maximum(mask.sum(), 1.0)
+        return (nll * mask).sum() / denom, (correct * mask).sum() / denom
+    return nll.mean(), correct.mean()

@@ -1,0 +1,327 @@
+"""Unified model API over all families.
+
+  model = build_model(cfg)
+  defs   = model.param_defs()                      # ParamDef tree
+  loss, metrics = model.loss(params, batch)        # train objective
+  last_logits, cache = model.prefill(params, batch, window=...)
+  logits, cache = model.decode_step(params, cache, tokens)
+  cache = model.init_cache(batch_size, max_seq)
+
+Families: dense | moe | vlm | audio (transformer.py), ssm (mamba2),
+hybrid (zamba2: mamba backbone + ONE shared attention block applied every
+`hybrid_attn_every` layers — the shared weights are scanned over as a
+closure, reproducing Zamba2's weight reuse).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.dist.sharding import get_parallel, shard
+from repro.models import layers as L
+from repro.models import ssd
+from repro.models import transformer as T
+from repro.models.param import ParamDef
+
+
+class BaseModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- train objective -------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        logits, aux, _ = self.forward(params, batch)
+        if cfg.frontend.kind == "frame":
+            labels = batch["labels"]
+            nll, acc = L.softmax_cross_entropy(
+                logits, labels, cfg.vocab, mask=batch.get("mask")
+            )
+        elif cfg.frontend.kind == "patch":
+            p = cfg.frontend.num_positions
+            tokens = batch["tokens"]                  # (B, T) text tokens
+            lg = logits[:, p - 1 : p - 1 + tokens.shape[1] - 1]
+            nll, acc = L.softmax_cross_entropy(lg, tokens[:, 1:], cfg.vocab)
+        else:
+            tokens = batch["tokens"]
+            nll, acc = L.softmax_cross_entropy(
+                logits[:, :-1], tokens[:, 1:], cfg.vocab
+            )
+        total = nll + aux
+        return total, {"loss": nll, "aux_loss": aux, "accuracy": acc}
+
+    # ---- overridden per family -------------------------------------------
+    def param_defs(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def forward(self, params, batch, *, collect_cache=False, window=0):
+        raise NotImplementedError
+
+    def prefill(self, params, batch, *, window: int = 0):
+        raise NotImplementedError
+
+    def decode_step(self, params, cache, tokens):
+        raise NotImplementedError
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Transformer families
+# ---------------------------------------------------------------------------
+
+
+class TransformerModel(BaseModel):
+    def param_defs(self):
+        return T.transformer_defs(self.cfg)
+
+    def forward(self, params, batch, *, collect_cache=False, window=0):
+        return T.forward(
+            self.cfg, params, batch, collect_cache=collect_cache, window=window
+        )
+
+    def prefill(self, params, batch, *, window: int = 0):
+        return T.prefill(self.cfg, params, batch, window=window)
+
+    def decode_step(self, params, cache, tokens):
+        return T.decode_step(self.cfg, params, cache, tokens)
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        return T.init_cache(self.cfg, batch_size, max_seq)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (pure SSM)
+# ---------------------------------------------------------------------------
+
+
+class MambaModel(BaseModel):
+    def param_defs(self):
+        cfg = self.cfg
+        vp = T.padded_vocab(cfg.vocab)
+        return {
+            "embed_tokens": ParamDef((vp, cfg.d_model), (None, "embed_tp"), init="normal"),
+            "ln_f": ParamDef((cfg.d_model,), (None,), init="ones"),
+            "lm_head": ParamDef((cfg.d_model, vp), ("embed", "vocab"), init="fan_in", scale=1.0),
+            "blocks": ssd.mamba_defs(cfg, cfg.n_layers),
+        }
+
+    def forward(self, params, batch, *, collect_cache=False, window=0):
+        cfg = self.cfg
+        x = T.embed_inputs(cfg, params, batch)
+        par = get_parallel()
+
+        def block(x, bp):
+            x, st = ssd.mamba_block(cfg, bp, x, collect_state=collect_cache)
+            return x, st
+
+        block = T._remat(block, par.remat_policy if cfg.remat else "none")
+        x, states = jax.lax.scan(block, x, params["blocks"])
+        logits = T.lm_logits(cfg, params, x)
+        cache = None
+        if collect_cache:
+            hf, tails = states
+            cache = {"ssm": hf, "conv": tails}
+        return logits, jnp.zeros((), jnp.float32), cache
+
+    def prefill(self, params, batch, *, window: int = 0):
+        logits, _, cache = self.forward(params, batch, collect_cache=True)
+        b = logits.shape[0]
+        cache["pos"] = jnp.full((b,), batch["tokens"].shape[1], jnp.int32)
+        return logits[:, -1], cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = jnp.take(params["embed_tokens"], tokens, axis=0)
+
+        def block(x, scanned):
+            bp, st, tx, tb, tc = scanned
+            x, st_new, tails = ssd.mamba_decode(
+                cfg, bp, x, st, {"x": tx, "B": tb, "C": tc}
+            )
+            return x, (st_new, tails["x"], tails["B"], tails["C"])
+
+        x, (st, tx, tb, tc) = jax.lax.scan(
+            block, x,
+            (params["blocks"], cache["ssm"], cache["conv"]["x"],
+             cache["conv"]["B"], cache["conv"]["C"]),
+        )
+        logits = T.lm_logits(cfg, params, x)[:, 0]
+        new_cache = {
+            "ssm": st,
+            "conv": {"x": tx, "B": tb, "C": tc},
+            "pos": cache["pos"] + 1,
+        }
+        return logits, new_cache
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        h = d_in // s.head_dim
+        nl, w = cfg.n_layers, s.conv_width
+        return {
+            "ssm": jnp.zeros((nl, batch_size, h, s.head_dim, s.state_dim), jnp.float32),
+            "conv": {
+                "x": jnp.zeros((nl, batch_size, w - 1, d_in), jnp.bfloat16),
+                "B": jnp.zeros((nl, batch_size, w - 1, s.state_dim), jnp.bfloat16),
+                "C": jnp.zeros((nl, batch_size, w - 1, s.state_dim), jnp.bfloat16),
+            },
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid
+# ---------------------------------------------------------------------------
+
+
+class HybridModel(BaseModel):
+    """Mamba2 backbone; ONE shared transformer block every `every` layers."""
+
+    @property
+    def n_super(self) -> int:
+        return self.cfg.n_layers // self.cfg.hybrid_attn_every
+
+    def param_defs(self):
+        cfg = self.cfg
+        vp = T.padded_vocab(cfg.vocab)
+        return {
+            "embed_tokens": ParamDef((vp, cfg.d_model), (None, "embed_tp"), init="normal"),
+            "ln_f": ParamDef((cfg.d_model,), (None,), init="ones"),
+            "lm_head": ParamDef((cfg.d_model, vp), ("embed", "vocab"), init="fan_in", scale=1.0),
+            "mamba": ssd.mamba_defs(cfg, cfg.hybrid_attn_every, lead=(self.n_super,)),
+            "shared": T.block_defs(cfg, 1),
+        }
+
+    def forward(self, params, batch, *, collect_cache=False, window=0):
+        cfg = self.cfg
+        x = T.embed_inputs(cfg, params, batch)
+        b, s, _ = x.shape
+        positions = jnp.arange(s)[None, :]
+        shared = jax.tree.map(lambda a: a[0], params["shared"])
+        par = get_parallel()
+
+        def super_block(x, mp):
+            def inner(x, lp):
+                x, st = ssd.mamba_block(cfg, lp, x, collect_state=collect_cache)
+                return x, st
+
+            # nested remat: without it the inner scan saves every mamba
+            # layer's SSD intermediates for the super-block backward
+            inner = T._remat(inner, par.remat_policy if cfg.remat else "none")
+            x, states = jax.lax.scan(inner, x, mp)
+            x, k, v = T.attention_block(cfg, shared, x, positions, window=window)
+            x, _ = T.mlp_block(cfg, shared, x)
+            if collect_cache:
+                return x, (states, k, v)
+            return x, None
+
+        super_block = T._remat(super_block, par.remat_policy if cfg.remat else "none")
+        x, ys = jax.lax.scan(super_block, x, params["mamba"])
+        logits = T.lm_logits(cfg, params, x)
+        cache = None
+        if collect_cache:
+            (hf, tails), ks, vs = ys
+            cache = {"ssm": hf, "conv": tails, "k": ks, "v": vs}
+        return logits, jnp.zeros((), jnp.float32), cache
+
+    def prefill(self, params, batch, *, window: int = 0):
+        cfg = self.cfg
+        logits, _, cache = self.forward(
+            params, batch, collect_cache=True, window=window
+        )
+        b, s = batch["tokens"].shape
+        cache["pos"] = jnp.full((b,), s, jnp.int32)
+        if window and window > 0 and s > window:
+            # keep only the last `window` positions, rotated so that
+            # absolute position p lives at slot p % window (circular cache)
+            def rotate(c):
+                idx = (jnp.arange(window) + (s - window)) % window
+                keep = jax.lax.dynamic_slice_in_dim(c, s - window, window, axis=2)
+                return jnp.zeros_like(keep).at[:, :, idx].set(keep)
+
+            cache["k"] = rotate(cache["k"])
+            cache["v"] = rotate(cache["v"])
+        return logits[:, -1], cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        pos = cache["pos"]
+        b = tokens.shape[0]
+        x = jnp.take(params["embed_tokens"], tokens, axis=0)
+        shared = jax.tree.map(lambda a: a[0], params["shared"])
+        s_cache = cache["k"].shape[2]
+        hq, hd = cfg.n_heads, cfg.resolved_head_dim
+
+        def super_block(x, scanned):
+            mp, st, tx, tb, tc, kc, vc = scanned
+
+            def inner(x, lp_st):
+                lp, st1, t1, t2, t3 = lp_st
+                x, st_new, tails = ssd.mamba_decode(
+                    cfg, lp, x, st1, {"x": t1, "B": t2, "C": t3}
+                )
+                return x, (st_new, tails["x"], tails["B"], tails["C"])
+
+            x, (st_n, tx_n, tb_n, tc_n) = jax.lax.scan(
+                inner, x, (mp, st, tx, tb, tc)
+            )
+            xn = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+            q, k, v = T._qkv(cfg, shared, xn, pos[:, None])
+            slot = pos % s_cache
+            kc = kc.at[jnp.arange(b), slot].set(k[:, 0])
+            vc = vc.at[jnp.arange(b), slot].set(v[:, 0])
+            o = L.decode_attention(q, kc, vc, jnp.minimum(pos + 1, s_cache))
+            o = jnp.einsum("bsH,He->bse", o.reshape(b, 1, hq * hd), shared["wo"])
+            x = x + o
+            x, _ = T.mlp_block(cfg, shared, x)
+            return x, (st_n, tx_n, tb_n, tc_n, kc, vc)
+
+        x, (st, tx, tb, tc, ks, vs) = jax.lax.scan(
+            super_block, x,
+            (params["mamba"], cache["ssm"], cache["conv"]["x"],
+             cache["conv"]["B"], cache["conv"]["C"], cache["k"], cache["v"]),
+        )
+        logits = T.lm_logits(cfg, params, x)[:, 0]
+        new_cache = {
+            "ssm": st,
+            "conv": {"x": tx, "B": tb, "C": tc},
+            "k": ks, "v": vs,
+            "pos": pos + 1,
+        }
+        return logits, new_cache
+
+    def init_cache(self, batch_size: int, max_seq: int, *, window: int = 0):
+        cfg = self.cfg
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        h = d_in // s.head_dim
+        ns, ev, w = self.n_super, cfg.hybrid_attn_every, s.conv_width
+        attn_s = min(max_seq, window) if window else max_seq
+        hd = cfg.resolved_head_dim
+        return {
+            "ssm": jnp.zeros((ns, ev, batch_size, h, s.head_dim, s.state_dim), jnp.float32),
+            "conv": {
+                "x": jnp.zeros((ns, ev, batch_size, w - 1, d_in), jnp.bfloat16),
+                "B": jnp.zeros((ns, ev, batch_size, w - 1, s.state_dim), jnp.bfloat16),
+                "C": jnp.zeros((ns, ev, batch_size, w - 1, s.state_dim), jnp.bfloat16),
+            },
+            "k": jnp.zeros((ns, batch_size, attn_s, cfg.n_kv_heads, hd), jnp.bfloat16),
+            "v": jnp.zeros((ns, batch_size, attn_s, cfg.n_kv_heads, hd), jnp.bfloat16),
+            "pos": jnp.zeros((batch_size,), jnp.int32),
+        }
+
+
+def build_model(cfg: ModelConfig) -> BaseModel:
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return TransformerModel(cfg)
+    if cfg.family == "ssm":
+        return MambaModel(cfg)
+    if cfg.family == "hybrid":
+        return HybridModel(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,280 @@
+"""Mamba2 / SSD (state-space duality) layer.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060):
+intra-chunk quadratic term + inter-chunk state recurrence via a
+``lax.scan`` over chunks.  All decay exponents are <= 0 (A < 0, dt > 0)
+so every ``exp`` is bounded by 1 — numerically safe in f32.
+
+Decode is the O(1)-state recurrence (state (B, H, P, N) + a depthwise
+conv tail), which is what makes 500k-token decode trivial for this
+family.
+
+Sharding: heads/d_inner on the model axis; B/C/state replicated (they are
+shared across heads, G=1 groups).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.layers import rms_norm
+from repro.models.param import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def mamba_defs(cfg: ModelConfig, nl: int, *, lead: Tuple[int, ...] = ()) -> Dict[str, Any]:
+    """Stacked defs for `nl` mamba layers; `lead` adds extra leading stack
+    dims (zamba2 stacks as (n_super, every))."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    h = d_in // s.head_dim
+    n = s.state_dim
+    w = s.conv_width
+    ld = lead + (nl,)
+    la = ("layers",) * len(ld)
+
+    def P(shape, axes, **kw):
+        return ParamDef(ld + shape, la + axes, **kw)
+
+    return {
+        "ln": P((d,), (None,), init="ones"),
+        "w_z": P((d, d_in), ("embed", "d_inner"), init="fan_in", scale=1.0),
+        "w_x": P((d, d_in), ("embed", "d_inner"), init="fan_in", scale=1.0),
+        "w_B": P((d, n), ("embed", None), init="fan_in", scale=1.0),
+        "w_C": P((d, n), ("embed", None), init="fan_in", scale=1.0),
+        "w_dt": P((d, h), ("embed", "ssm_heads"), init="fan_in", scale=1.0),
+        "dt_bias": P((h,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "A_log": P((h,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "D": P((h,), ("ssm_heads",), init="ones", dtype="float32"),
+        "conv_x": P((w, d_in), (None, "d_inner"), init="fan_in", scale=1.0),
+        "conv_B": P((w, n), (None, None), init="fan_in", scale=1.0),
+        "conv_C": P((w, n), (None, None), init="fan_in", scale=1.0),
+        "gnorm": P((d_in,), ("d_inner",), init="ones"),
+        "w_out": P((d_in, d), ("d_inner", "embed"), init="fan_in", scale=1.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (width w, per channel)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """u: (B, S, C); w: (W, C). Returns (B, S, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    s = u.shape[1]
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i : i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(u.dtype)
+
+
+def conv_step(tail: jax.Array, u_new: jax.Array, w: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """tail: (B, W-1, C); u_new: (B, C). Returns (y (B, C), new_tail)."""
+    width = w.shape[0]
+    full = jnp.concatenate([tail, u_new[:, None]], axis=1)   # (B, W, C)
+    y = jnp.sum(full.astype(jnp.float32) * w[None].astype(jnp.float32), axis=1)
+    return y.astype(u_new.dtype), full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_reference(x, dt, a, b_mat, c_mat, h0=None):
+    """Sequential oracle. x: (B,S,H,P); dt: (B,S,H) f32; a: (H,) f32 (<0);
+    b,c: (B,S,N). Returns (y, h_final (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(hst, t):
+        xt, dtt, bt, ct = t
+        da = jnp.exp(dtt * a)                                 # (B,H)
+        upd = (dtt[..., None] * xt.astype(jnp.float32))[..., None] * bt[:, None, None, :]
+        hst = hst * da[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, hst)
+        return hst, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        b_mat.astype(jnp.float32).transpose(1, 0, 2),
+        c_mat.astype(jnp.float32).transpose(1, 0, 2),
+    )
+    hf, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hf
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, h0=None):
+    """Chunked SSD. Shapes as ssd_reference. Returns (y, h_final)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    while s % q != 0:
+        q //= 2
+    nc = s // q
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = b_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    da = dtc * a                                              # (b,c,q,h) <= 0
+    cs = jnp.cumsum(da, axis=2)                               # (b,c,q,h)
+
+    # ---- intra-chunk (block-diagonal) term
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]        # (b,c,l,m,h)
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    # mask INSIDE the exp: above-diagonal diff is large-positive, and
+    # where(mask, exp(diff), 0) would backprop inf * 0 = NaN
+    decay = jnp.exp(jnp.where(tril[None, None, :, :, None], diff, -jnp.inf))
+    scores = jnp.einsum("bcln,bcmn->bclm", cc, bc)            # (b,c,l,m)
+    g = decay * dtc[:, :, None, :, :]                         # (b,c,l,m,h)
+    g = g * scores[..., None]
+    y_intra = jnp.einsum(
+        "bclmh,bcmhp->bclhp", g, xc.astype(jnp.float32)
+    )
+
+    # ---- per-chunk end states
+    last = cs[:, :, -1:, :]                                   # (b,c,1,h)
+    sdecay = jnp.exp(last - cs)                               # (b,c,q,h)
+    states = jnp.einsum(
+        "bcqn,bcqh,bcqhp->bchpn", bc, sdecay * dtc, xc.astype(jnp.float32)
+    )                                                         # (b,c,h,p,n)
+
+    # ---- inter-chunk recurrence
+    chunk_decay = jnp.exp(last[:, :, 0])                      # (b,c,h)
+
+    def step(hst, t):
+        st, dec = t
+        h_in = hst
+        hst = hst * dec[..., None, None] + st
+        return hst, h_in
+
+    hf, h_prevs = jax.lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                # (b,c,h,p,n)
+
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", cc, h_prevs)
+    y_inter = y_inter * jnp.exp(cs)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p).astype(x.dtype)
+    return y, hf
+
+
+def ssd_decode_step(state, xt, dtt, a, bt, ct):
+    """One-token recurrence. state: (B,H,P,N) f32; xt: (B,H,P);
+    dtt: (B,H) f32; bt/ct: (B,N). Returns (y (B,H,P), new_state)."""
+    da = jnp.exp(dtt * a)
+    upd = (dtt[..., None] * xt.astype(jnp.float32))[..., None] * bt.astype(jnp.float32)[:, None, None, :]
+    state = state * da[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), state)
+    return y.astype(xt.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _project(cfg: ModelConfig, bp: Dict[str, jax.Array], xn: jax.Array):
+    s = cfg.ssm
+    # use-site constraints pin weight cotangents (see transformer._qkv)
+    z = jnp.einsum("bse,ei->bsi", xn, shard(bp["w_z"], "embed", "d_inner"))
+    xi = jnp.einsum("bse,ei->bsi", xn, shard(bp["w_x"], "embed", "d_inner"))
+    bm = jnp.einsum("bse,en->bsn", xn, shard(bp["w_B"], "embed", None))
+    cm = jnp.einsum("bse,en->bsn", xn, shard(bp["w_C"], "embed", None))
+    dt = jnp.einsum("bse,eh->bsh", xn,
+                    shard(bp["w_dt"], "embed", "ssm_heads")).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + bp["dt_bias"])
+    return z, xi, bm, cm, dt
+
+
+def mamba_block(cfg: ModelConfig, bp: Dict[str, jax.Array], x: jax.Array,
+                *, collect_state: bool = False):
+    """Full-sequence mamba2 block. x: (B,S,E). Returns
+    (x_out, (ssm_state, conv_tails) | None)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    bsz, slen, _ = x.shape
+
+    xn = rms_norm(x, bp["ln"], cfg.norm_eps)
+    xn = shard(xn, "batch", None, None)   # SP -> TP boundary
+    z, xi, bm, cm, dt = _project(cfg, bp, xn)
+    xi = shard(xi, "batch", None, "d_inner")
+
+    xi_c = jax.nn.silu(causal_conv(xi, bp["conv_x"]).astype(jnp.float32)).astype(x.dtype)
+    bm_c = jax.nn.silu(causal_conv(bm, bp["conv_B"]).astype(jnp.float32)).astype(x.dtype)
+    cm_c = jax.nn.silu(causal_conv(cm, bp["conv_C"]).astype(jnp.float32)).astype(x.dtype)
+
+    a = -jnp.exp(bp["A_log"])
+    xh = xi_c.reshape(bsz, slen, h, s.head_dim)
+    xh = shard(xh, "batch", None, "ssm_heads", None)
+    y, hf = ssd_chunked(xh, dt, a, bm_c, cm_c, s.chunk_size)
+    y = y + bp["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, slen, d_in)
+
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, bp["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,ie->bse", y, shard(bp["w_out"], "d_inner", "embed"))
+    x = x + out
+    x = shard(x, "batch", "seq_sp", None)
+
+    if not collect_state:
+        return x, None
+    w = s.conv_width
+    tails = {
+        "x": xi[:, slen - (w - 1):].astype(jnp.bfloat16),
+        "B": bm[:, slen - (w - 1):].astype(jnp.bfloat16),
+        "C": cm[:, slen - (w - 1):].astype(jnp.bfloat16),
+    }
+    return x, (hf, tails)
+
+
+def mamba_decode(cfg: ModelConfig, bp: Dict[str, jax.Array], x: jax.Array,
+                 state: jax.Array, tails: Dict[str, jax.Array]):
+    """One-token mamba2 step. x: (B,1,E); state: (B,H,P,N) f32;
+    tails: conv tails dict of (B, W-1, C). Returns (x_out, state, tails)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    bsz = x.shape[0]
+
+    xn = rms_norm(x, bp["ln"], cfg.norm_eps)
+    z, xi, bm, cm, dt = _project(cfg, bp, xn)
+
+    xi_y, tx = conv_step(tails["x"], xi[:, 0], bp["conv_x"])
+    bm_y, tb = conv_step(tails["B"], bm[:, 0], bp["conv_B"])
+    cm_y, tc = conv_step(tails["C"], cm[:, 0], bp["conv_C"])
+    xi_c = jax.nn.silu(xi_y.astype(jnp.float32)).astype(x.dtype)
+    bm_c = jax.nn.silu(bm_y.astype(jnp.float32)).astype(x.dtype)
+    cm_c = jax.nn.silu(cm_y.astype(jnp.float32)).astype(x.dtype)
+
+    a = -jnp.exp(bp["A_log"])
+    xh = xi_c.reshape(bsz, h, s.head_dim)
+    y, state = ssd_decode_step(state, xh, dt[:, 0], a, bm_c, cm_c)
+    y = y + bp["D"][None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, bp["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,ie->bse", y, bp["w_out"])
+    return x + out, state, {"x": tx, "B": tb, "C": tc}

@@ -1,0 +1,335 @@
+"""Decoder (and encoder) transformer families: dense | moe | vlm | audio.
+
+Layers are stacked (leading ``n_layers`` dim) and iterated with
+``lax.scan`` so HLO size — and therefore 512-device compile time — is
+O(1) in depth.  Remat wraps the scanned block per ``ParallelConfig``.
+
+Sharding (logical axes, resolved by repro.dist.sharding):
+  weights:  embed -> data (FSDP, all-gathered per scan step)
+            heads/ff/vocab -> model (TP)
+  activations: batch -> (pod, data); seq -> model between blocks (SP);
+            heads -> model inside attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.dist.sharding import get_parallel, shard
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.param import ParamDef
+
+
+def padded_vocab(vocab: int, model_axis: int = 16) -> int:
+    if vocab < 8192 or vocab % model_axis == 0:
+        return vocab
+    mult = 128 * model_axis
+    return -(-vocab // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: ModelConfig, nl: int) -> Dict[str, Any]:
+    """Stacked defs for `nl` transformer blocks (attn + mlp/moe)."""
+    d = cfg.d_model
+    h = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+
+    block: Dict[str, Any] = {
+        "ln1": ParamDef((nl, d), ("layers", None), init="ones"),
+        "wq": ParamDef((nl, d, hq * h), ("layers", "embed", "heads"), init="fan_in", scale=1.0),
+        "wk": ParamDef((nl, d, hkv * h), ("layers", "embed", "heads"), init="fan_in", scale=1.0),
+        "wv": ParamDef((nl, d, hkv * h), ("layers", "embed", "heads"), init="fan_in", scale=1.0),
+        "wo": ParamDef((nl, hq * h, d), ("layers", "heads", "embed"), init="fan_in", scale=1.0),
+        "ln2": ParamDef((nl, d), ("layers", None), init="ones"),
+    }
+    if cfg.qkv_bias:
+        block["bq"] = ParamDef((nl, hq * h), ("layers", "heads"), init="zeros")
+        block["bk"] = ParamDef((nl, hkv * h), ("layers", "heads"), init="zeros")
+        block["bv"] = ParamDef((nl, hkv * h), ("layers", "heads"), init="zeros")
+    if cfg.moe is not None:
+        block["moe"] = moe_lib.moe_defs(cfg, nl)
+    else:
+        block["w_gate"] = ParamDef((nl, d, cfg.d_ff), ("layers", "embed", "ff"), init="fan_in", scale=1.0)
+        block["w_up"] = ParamDef((nl, d, cfg.d_ff), ("layers", "embed", "ff"), init="fan_in", scale=1.0)
+        block["w_down"] = ParamDef((nl, cfg.d_ff, d), ("layers", "ff", "embed"), init="fan_in", scale=1.0)
+    return block
+
+
+def transformer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    vp = padded_vocab(cfg.vocab)
+    defs: Dict[str, Any] = {
+        "blocks": block_defs(cfg, cfg.n_layers),
+        "ln_f": ParamDef((d,), (None,), init="ones"),
+    }
+
+    if cfg.frontend.kind == "frame":
+        defs["frame_proj"] = ParamDef((cfg.frontend.embed_dim, d), (None, "embed"), init="fan_in", scale=1.0)
+        defs["mask_emb"] = ParamDef((d,), (None,), init="normal")
+        defs["lm_head"] = ParamDef((d, cfg.vocab), ("embed", "vocab"), init="fan_in", scale=1.0)
+        return defs
+
+    # vocab dim UNSHARDED, d_model over the model axis: token gather and
+    # its scatter-add backward stay device-local (sharding the vocab dim
+    # makes XLA all-gather the table fwd and all-reduce an f32 (V, d)
+    # gradient bwd — measured 3GiB/device on grok-1; EXPERIMENTS.md §Perf)
+    defs["embed_tokens"] = ParamDef((vp, d), (None, "embed_tp"), init="normal")
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, vp), ("embed", "vocab"), init="fan_in", scale=1.0)
+    if cfg.frontend.kind == "patch":
+        defs["patch_proj"] = ParamDef((cfg.frontend.embed_dim, d), (None, "embed"), init="fan_in", scale=1.0)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg: ModelConfig, bp: Dict[str, jax.Array], xn: jax.Array,
+         positions: jax.Array):
+    h = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    b, s, _ = xn.shape
+    # use-site weight constraints: the fwd constraint is a no-op (weights
+    # already sharded) but its TRANSPOSE pins each layer's weight
+    # cotangent inside the scan backward -> per-layer reduce-scatter
+    # instead of a replicated f32 all-reduce (EXPERIMENTS.md §Perf)
+    q = jnp.einsum("bse,eH->bsH", xn, shard(bp["wq"], "embed", "heads"))
+    k = jnp.einsum("bse,eH->bsH", xn, shard(bp["wk"], "embed", "heads"))
+    v = jnp.einsum("bse,eH->bsH", xn, shard(bp["wv"], "embed", "heads"))
+    if cfg.qkv_bias:
+        q, k, v = q + bp["bq"], k + bp["bk"], v + bp["bv"]
+    q = q.reshape(b, s, hq, h)
+    k = k.reshape(b, s, hkv, h)
+    v = v.reshape(b, s, hkv, h)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(
+    cfg: ModelConfig, bp: Dict[str, jax.Array], x: jax.Array,
+    positions: jax.Array, *, window: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence attention (train / prefill). Returns (x, k, v) so the
+    prefill path can collect the KV cache."""
+    xn = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    # SP -> TP boundary: all-gather the seq-sharded activations once, in
+    # one clean op, before the head-sharded attention region.
+    xn = shard(xn, "batch", None, None)
+    q, k, v = _qkv(cfg, bp, xn, positions)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k = shard(k, "batch", None, None, None)
+    v = shard(v, "batch", None, None, None)
+    kr = L.repeat_kv(k, n_rep)
+    vr = L.repeat_kv(v, n_rep)
+    q = shard(q, "batch", None, "heads", None)
+    kr = shard(kr, "batch", None, "heads", None)
+    vr = shard(vr, "batch", None, "heads", None)
+    o = L.flash_attention(
+        q, kr, vr, causal=cfg.causal, window=window, chunk=cfg.attn_chunk
+    )
+    b, s, _, _ = o.shape
+    o = jnp.einsum("bsH,He->bse", o.reshape(b, s, -1),
+                   shard(bp["wo"], "heads", "embed"))
+    x = x + o
+    return shard(x, "batch", "seq_sp", None), k, v
+
+
+def mlp_block(cfg: ModelConfig, bp: Dict[str, jax.Array], x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    xn = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    xn = shard(xn, "batch", None, None)   # SP -> TP boundary
+    if cfg.moe is not None:
+        y, aux = moe_lib.moe_apply(bp["moe"], xn, cfg)
+    else:
+        y = L.swiglu(xn, shard(bp["w_gate"], "embed", "ff"),
+                     shard(bp["w_up"], "embed", "ff"),
+                     shard(bp["w_down"], "ff", "embed"))
+        aux = jnp.zeros((), jnp.float32)
+    x = x + y
+    return shard(x, "batch", "seq_sp", None), aux
+
+
+def _remat(fn, policy_name: str):
+    if policy_name == "none":
+        return fn
+    policies = {
+        "minimal": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "full": jax.checkpoint_policies.everything_saveable,
+    }
+    return jax.checkpoint(fn, policy=policies[policy_name])
+
+
+# ---------------------------------------------------------------------------
+# Embedding frontends
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg: ModelConfig, params: Dict[str, Any],
+                 batch: Dict[str, jax.Array]) -> jax.Array:
+    if cfg.frontend.kind == "frame":
+        x = jnp.einsum(
+            "bsf,fd->bsd", batch["frame_embeds"].astype(jnp.bfloat16),
+            params["frame_proj"],
+        )
+        if "mask" in batch:
+            x = jnp.where(
+                batch["mask"][..., None], params["mask_emb"].astype(x.dtype), x
+            )
+        return shard(x, "batch", "seq_sp", None)
+    emb = params["embed_tokens"]
+    x = L.embed_lookup(emb, batch["tokens"])
+    if cfg.frontend.kind == "patch":
+        px = jnp.einsum(
+            "bpf,fd->bpd", batch["patch_embeds"].astype(jnp.bfloat16),
+            params["patch_proj"],
+        )
+        x = jnp.concatenate([px.astype(x.dtype), x], axis=1)
+    return shard(x, "batch", "seq_sp", None)
+
+
+def lm_logits(cfg: ModelConfig, params: Dict[str, Any], x: jax.Array) -> jax.Array:
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.frontend.kind == "frame" or not cfg.tie_embeddings:
+        logits = jnp.einsum("bse,eV->bsV", x,
+                            shard(params["lm_head"], "embed", "vocab"))
+    else:
+        logits = jnp.einsum("bse,Ve->bsV", x, params["embed_tokens"])
+    return shard(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Forward (train) / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params: Dict[str, Any],
+            batch: Dict[str, jax.Array], *, collect_cache: bool = False,
+            window: int = 0):
+    """Returns (logits, aux_loss, cache|None)."""
+    x = embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    par = get_parallel()
+
+    def block(x, bp):
+        x, k, v = attention_block(cfg, bp, x, positions, window=window)
+        x, aux = mlp_block(cfg, bp, x)
+        if collect_cache:
+            return x, (k, v, aux)
+        return x, aux
+
+    block = _remat(block, par.remat_policy if cfg.remat else "none")
+
+    ks = vs = None
+    if par.scan_layers:
+        if collect_cache:
+            x, (ks, vs, auxs) = jax.lax.scan(block, x, params["blocks"])
+        else:
+            x, auxs = jax.lax.scan(block, x, params["blocks"])
+        aux = jnp.sum(auxs)
+    else:
+        ks_l, vs_l, aux = [], [], jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[i], params["blocks"])
+            if collect_cache:
+                x, (k, v, a) = block(x, bp)
+                ks_l.append(k)
+                vs_l.append(v)
+            else:
+                x, a = block(x, bp)
+            aux = aux + a
+        if collect_cache:
+            ks = jnp.stack(ks_l)
+            vs = jnp.stack(vs_l)
+
+    logits = lm_logits(cfg, params, x)
+    cache = None
+    if collect_cache:
+        cache = {"k": ks, "v": vs}
+    return logits, aux, cache
+
+
+def prefill(cfg: ModelConfig, params: Dict[str, Any],
+            batch: Dict[str, jax.Array], *, window: int = 0):
+    """Returns (last_logits (B, V), cache dict with per-layer K/V and pos)."""
+    logits, _, cache = forward(
+        cfg, params, batch, collect_cache=not cfg.encoder_only, window=window
+    )
+    last = logits[:, -1]
+    if cfg.encoder_only:
+        return last, {}
+    b = last.shape[0]
+    s = cache["k"].shape[2]
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    cache["k"] = _shard_kv_cache(cache["k"])
+    cache["v"] = _shard_kv_cache(cache["v"])
+    return last, cache
+
+
+def _shard_kv_cache(c: jax.Array) -> jax.Array:
+    """(L, B, S, Hkv, D) cache: model axis on seq (flash-decoding) OR
+    heads, per ParallelConfig.decode_cache_shard — never both."""
+    if get_parallel().decode_cache_shard == "seq":
+        return shard(c, "layers", "batch", "kv_seq", None, None)
+    return shard(c, "layers", "batch", None, "heads", None)
+
+
+def decode_step(cfg: ModelConfig, params: Dict[str, Any],
+                cache: Dict[str, jax.Array], tokens: jax.Array, *,
+                extra: Optional[Dict[str, jax.Array]] = None):
+    """One decode step. tokens: (B, 1) int32; cache holds (L,B,S,Hkv,D) K/V
+    plus pos (B,). The cache is CIRCULAR: writes land at pos % S, so a
+    cache allocated at window size implements sliding-window decode with
+    no extra logic. Returns (logits (B, V), new_cache)."""
+    pos = cache["pos"]                               # (B,) absolute positions
+    x = jnp.take(params["embed_tokens"], tokens, axis=0)  # (B,1,d)
+    h = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    b = tokens.shape[0]
+    s_cache = cache["k"].shape[2]
+
+    def block(x, scanned):
+        bp, kc, vc = scanned                         # kc/vc: (B,S,Hkv,D)
+        xn = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, bp, xn, pos[:, None])
+        slot = pos % s_cache
+        kc = kc.at[jnp.arange(b), slot].set(k[:, 0])
+        vc = vc.at[jnp.arange(b), slot].set(v[:, 0])
+        o = L.decode_attention(q, kc, vc, jnp.minimum(pos + 1, s_cache))
+        o = jnp.einsum("bsH,He->bse", o.reshape(b, 1, hq * h), bp["wo"])
+        x = x + o
+        x, _ = mlp_block(cfg, bp, x)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(block, x, (params["blocks"], cache["k"], cache["v"]))
+    logits = lm_logits(cfg, params, x)[:, 0]
+    new_cache = {
+        "k": _shard_kv_cache(ks),
+        "v": _shard_kv_cache(vs),
+        "pos": pos + 1,
+    }
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    h = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch_size, max_seq, cfg.n_kv_heads, h)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+    }

@@ -1,0 +1,4 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.schedules import lr_schedule
+from repro.optim.util import global_norm, clip_by_global_norm

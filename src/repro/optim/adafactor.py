@@ -1,0 +1,111 @@
+"""Adafactor (factored second moments) — sublinear optimizer memory for
+the largest models; selectable via ParallelConfig(optimizer="adafactor").
+
+The update is written to avoid materializing f32 copies of param-sized
+tensors: the factored row/col statistics are computed as DOTS with f32
+accumulation over the bf16 gradients, and the full-tensor update math
+runs in the parameter dtype with broadcast f32->param_dtype scale
+vectors.  This keeps the largest live temporary at 1x param bytes (vs
+~4x in a naive f32 implementation) — see EXPERIMENTS.md §Perf (grok-1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+from repro.optim.schedules import lr_schedule
+
+_EPS = 1e-30
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params, moment_dtype: str = "float32") -> Dict[str, Any]:
+    def init(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(init, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _sumsq_axis(g, axis):
+    # REDUCE-based: the f32 convert+square fuses into the reduction loop
+    # (a dot formulation materializes f32 operand copies on XLA:CPU)
+    return jnp.sum(jnp.square(g.astype(jnp.float32)), axis=axis)
+
+
+def _sumsq_last(g):
+    return _sumsq_axis(g, -1)
+
+
+def adafactor_update(
+    grads, state, params, cfg: OptimizerConfig, grad_scale=None
+) -> Tuple[Any, Dict[str, Any]]:
+    count = state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    beta = 1.0 - count.astype(jnp.float32) ** -0.8
+
+    def upd(g, s, p):
+        if grad_scale is not None:
+            g = g * grad_scale.astype(g.dtype)
+        if _factored(p.shape):
+            nr = p.shape[-1]
+            nc = p.shape[-2]
+            g2r = _sumsq_last(g) / nr + _EPS                 # (..., rows)
+            g2c = _sumsq_axis(g, -2) / nc + _EPS             # (..., cols)
+            vr = beta * s["vr"] + (1 - beta) * g2r
+            vc = beta * s["vc"] + (1 - beta) * g2c
+            denom = vr.mean(-1, keepdims=True)
+            br = jax.lax.rsqrt(vr / jnp.maximum(denom, _EPS) + _EPS)
+            bc = jax.lax.rsqrt(vc + _EPS)
+            # full-tensor math in param dtype; scales broadcast-cast
+            step = g * br[..., None].astype(g.dtype)
+            step = step * bc[..., None, :].astype(g.dtype)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta * s["v"] + (1 - beta) * (
+                g.astype(jnp.float32) ** 2 + _EPS
+            )
+            step = (g.astype(jnp.float32) * jax.lax.rsqrt(v + _EPS)).astype(g.dtype)
+            new_s = {"v": v}
+        # update clipping (RMS <= 1) — rms via dot, no f32 copy
+        n_elem = float(step.size)  # python float: avoids int32 overflow
+        rms = jnp.sqrt(
+            jnp.sum(jnp.square(step.astype(jnp.float32))) / n_elem + _EPS
+        )
+        scale = (1.0 / jnp.maximum(1.0, rms)) * lr
+        new_p = p - step * scale.astype(p.dtype) \
+            - p * (lr * cfg.weight_decay).astype(p.dtype)
+        return new_p.astype(p.dtype), new_s
+
+    is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = jax.tree.flatten(state["v"], is_leaf=is_state)[0]
+    out = []
+    fence = None
+    for g, s, p in zip(flat_g, flat_s, flat_p):
+        # Sequence LARGE leaf updates behind the previous one so their
+        # update temporaries are never live together (peak-memory fence;
+        # on TPU the serialized fusions cost nothing measurable).
+        if fence is not None and p.size > 10_000_000:
+            g, _ = jax.lax.optimization_barrier((g, fence))
+        new_p, new_s_leaf = upd(g, s, p)
+        if p.size > 10_000_000:
+            fence = jnp.zeros((), new_p.dtype) * new_p.ravel()[0]
+        out.append((new_p, new_s_leaf))
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_s = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_p, {"v": new_s, "count": count}

@@ -1,0 +1,80 @@
+"""AdamW with configurable moment dtype.
+
+``moment_dtype="bfloat16"`` halves optimizer memory (8-bit-Adam-style
+state compression, the distributed-memory trick that lets grok-1-314b fit
+a single 256-chip pod — see EXPERIMENTS.md §Dry-run)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+from repro.optim.schedules import lr_schedule
+
+
+def adamw_init(params, moment_dtype: str = "float32") -> Dict[str, Any]:
+    dt = jnp.dtype(moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads, state, params, cfg: OptimizerConfig, *, scan_dim0: bool = False,
+    grad_scale=None,
+) -> Tuple[Any, Dict[str, Any]]:
+    # NOTE scan_dim0=True was tried to bound f32 temporaries to one layer
+    # slice; REFUTED on XLA:CPU — LICM hoists the per-slice converts back
+    # into full-stack f32 copies AND the loop breaks donation aliasing
+    # (temp 14.7GB -> 23.4GB on grok-1). See EXPERIMENTS.md §Perf.
+    count = state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd_slice(g, m, v, p):
+        if grad_scale is not None:
+            g = g * grad_scale.astype(g.dtype)
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m32 / c1
+        vhat = v32 / c2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    def upd(g, m, v, p):
+        # Update stacked-layer params one dim0 slice at a time inside a
+        # fori_loop whose carry IS (p, m, v): the donated buffers are
+        # updated in place and the f32 temporaries are bounded by ONE
+        # layer slice (n_layers x less peak memory on backends that
+        # materialize the elementwise chain).
+        if scan_dim0 and p.ndim >= 3 and p.shape[0] > 1:
+            def body(i, carry):
+                cp, cm, cv = carry
+                sl = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+                np_, nm, nv = upd_slice(sl(g), sl(m), sl(v), sl(cp))
+                st = lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u, i, 0)
+                return st(cp, np_), st(cm, nm), st(cv, nv)
+
+            return jax.lax.fori_loop(0, p.shape[0], body, (p, m, v))
+        new_p, new_m, new_v = upd_slice(g, m, v, p)
+        return new_p, new_m, new_v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,27 @@
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        decay = 1.0 - frac
+    else:  # cosine
+        frac = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay

@@ -1,0 +1,33 @@
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _sumsq(x: jax.Array) -> jax.Array:
+    # REDUCE-based sum of squares: XLA fuses the f32 convert+square into
+    # the reduction loop (no materialized f32 copy of the tensor).  A
+    # dot/einsum formulation was tried and REFUTED on XLA:CPU — dot
+    # operands get converted to f32 buffers first (EXPERIMENTS.md §Perf).
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(_sumsq(x) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    # rescale in the tensor's own dtype (scalar broadcast — no f32 copies)
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def global_norm_scale(tree, max_norm: float):
+    """(scale, norm) — apply the scale lazily inside the optimizer's
+    per-leaf (memory-fenced) loop instead of materializing a rescaled
+    gradient tree up front."""
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return scale, norm

@@ -1,0 +1,188 @@
+"""Continuous-batching serving engine — the FeedRouter pull logic applied
+to inference requests.
+
+Requests arrive in a main + a priority bounded queue (AlertMix Fig. 3).
+The decode loop keeps `max_batch` slots; the router's replenishment rules
+govern admission:
+  (a) aim for a full slot set (optimal = max_batch)
+  (b) after `replenish_after` sequences FINISH, admit waiting requests
+  (c) a timeout admits them anyway (bounds time-to-first-token)
+  (d) admission fills back to optimal
+New requests are prefilled individually (length-bucketed compile cache)
+and their KV rows scattered into the shared batched cache; every decode
+step advances ALL active slots in one jitted call.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+from repro.core.queues import BoundedPriorityQueue, Message
+from repro.core.dead_letters import DeadLettersListener
+from repro.models.model import BaseModel
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt_tokens: List[int]
+    max_new_tokens: int = 32
+    priority: int = 1
+    arrived_at: float = 0.0
+    # filled by the engine
+    output_tokens: List[int] = field(default_factory=list)
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+def _bucket(n: int, mult: int = 16) -> int:
+    return max(mult, -(-n // mult) * mult)
+
+
+class ServeEngine:
+    def __init__(self, model: BaseModel, params, cfg: ServeConfig,
+                 *, eos_id: int = 2, clock: Callable[[], float] = time.monotonic):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.eos_id = eos_id
+        self.clock = clock
+        self.dead_letters = DeadLettersListener()
+        self.main_q = BoundedPriorityQueue(cfg.queue_capacity,
+                                           dead_letters=self.dead_letters)
+        self.prio_q = BoundedPriorityQueue(cfg.queue_capacity,
+                                           dead_letters=self.dead_letters)
+
+        b, s = cfg.max_batch, cfg.max_seq_len
+        self.cache = model.init_cache(b, s)
+        self.tokens = jnp.zeros((b, 1), jnp.int32)
+        self.active = np.zeros(b, dtype=bool)
+        self.slot_req: List[Optional[Request]] = [None] * b
+        self.finished_since_admit = 0
+        self.last_admit_at = 0.0
+        self.completed: List[Request] = []
+        self.steps = 0
+        self.tokens_generated = 0
+
+        self._decode = jax.jit(lambda p, c, t: model.decode_step(p, c, t))
+        self._prefill_cache: Dict[int, Callable] = {}
+
+    # ---- request admission (FeedRouter rules) -------------------------------
+    def submit(self, req: Request) -> bool:
+        q = self.prio_q if req.priority == 0 else self.main_q
+        return q.offer(Message(priority=req.priority, payload=req,
+                               enqueued_at=self.clock()))
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, a in enumerate(self.active) if not a]
+
+    def _should_admit(self, now: float) -> bool:
+        if not any(self.active):
+            return True                                   # cold start
+        count_hit = self.finished_since_admit >= self.cfg.replenish_after
+        timeout_hit = (now - self.last_admit_at) >= self.cfg.replenish_timeout_s
+        return count_hit or timeout_hit
+
+    def _admit(self, now: float) -> int:
+        free = self._free_slots()
+        admitted = 0
+        for slot in free:
+            msg = self.prio_q.poll() or self.main_q.poll()
+            if msg is None:
+                break
+            req: Request = msg.payload
+            self._prefill_into_slot(req, slot, now)
+            admitted += 1
+        if admitted or self.finished_since_admit:
+            self.finished_since_admit = 0
+            self.last_admit_at = now
+        return admitted
+
+    def _prefill_into_slot(self, req: Request, slot: int, now: float) -> None:
+        # prefill at the EXACT prompt length: padding would corrupt SSM
+        # states (sequential) and pollute attention; the jit cache is
+        # keyed per length (demo-scale; production would bucket + mask)
+        max_prompt = self.cfg.max_seq_len - req.max_new_tokens
+        ids = req.prompt_tokens[-max_prompt:]
+        bl = len(ids)
+        fn = self._prefill_cache.get(bl)
+        if fn is None:
+            fn = jax.jit(lambda p, b: self.model.prefill(p, b))
+            self._prefill_cache[bl] = fn
+        batch = {"tokens": jnp.asarray([ids], jnp.int32)}
+        last_logits, pcache = fn(self.params, batch)
+
+        # scatter the prefilled KV rows into the shared cache at `slot`
+        for key in ("k", "v"):
+            if key in self.cache:
+                big = self.cache[key]
+                small = pcache[key]
+                pad = [(0, 0)] * big.ndim
+                pad[2] = (0, big.shape[2] - small.shape[2])
+                small = jnp.pad(small, pad)
+                self.cache[key] = jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), slot, axis=1)
+        if "ssm" in self.cache:
+            ax = self.cache["ssm"].ndim - 4
+            self.cache["ssm"] = jax.lax.dynamic_update_slice_in_dim(
+                self.cache["ssm"], pcache["ssm"].astype(self.cache["ssm"].dtype),
+                slot, axis=ax)
+            for ck in ("x", "B", "C"):
+                ax2 = self.cache["conv"][ck].ndim - 3
+                self.cache["conv"][ck] = jax.lax.dynamic_update_slice_in_dim(
+                    self.cache["conv"][ck],
+                    pcache["conv"][ck].astype(self.cache["conv"][ck].dtype),
+                    slot, axis=ax2)
+        self.cache["pos"] = self.cache["pos"].at[slot].set(bl)
+
+        first = int(jnp.argmax(last_logits[0]))
+        req.output_tokens.append(first)
+        req.first_token_at = now
+        self.tokens = self.tokens.at[slot, 0].set(first)
+        self.active[slot] = True
+        self.slot_req[slot] = req
+
+    # ---- decode loop ---------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: admit if due, then one batched decode."""
+        now = self.clock()
+        if self._should_admit(now):
+            self._admit(now)
+        if not any(self.active):
+            return 0
+        logits, self.cache = self._decode(self.params, self.cache, self.tokens)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.steps += 1
+        produced = 0
+        for slot, req in enumerate(self.slot_req):
+            if req is None or not self.active[slot]:
+                continue
+            tok = int(nxt[slot])
+            req.output_tokens.append(tok)
+            produced += 1
+            done = (tok == self.eos_id
+                    or len(req.output_tokens) >= req.max_new_tokens
+                    or int(self.cache["pos"][slot]) >= self.cfg.max_seq_len - 1)
+            if done:
+                req.finished_at = now
+                self.completed.append(req)
+                self.slot_req[slot] = None
+                self.active[slot] = False
+                self.finished_since_admit += 1
+        self.tokens = jnp.asarray(nxt[:, None])
+        self.tokens_generated += produced
+        return produced
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            pending = len(self.main_q) + len(self.prio_q)
+            if not pending and not any(self.active):
+                break
+            self.step()
+        return self.completed

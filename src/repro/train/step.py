@@ -1,0 +1,210 @@
+"""Train / prefill / decode step builders.
+
+``make_train_step`` builds a single jitted update:
+  * gradient accumulation over M microbatches via ``lax.scan``
+    (bounds activation memory to one microbatch; the accumulator is
+    param-shaped and inherits the FSDP/TP sharding of the grads),
+  * global-norm clipping,
+  * optional int8 compressed gradient all-reduce (repro.dist.collectives),
+  * AdamW / Adafactor update.
+
+All steps are pure functions of (params, opt_state, batch) so they can be
+jit-lowered with ShapeDtypeStructs for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, OptimizerConfig, ParallelConfig
+from repro.dist.sharding import shard
+from repro.models.model import BaseModel
+from repro.optim import (
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+)
+from repro.optim.util import global_norm_scale
+
+
+def _opt_name(ocfg: OptimizerConfig, parallel: ParallelConfig) -> str:
+    return parallel.optimizer or ocfg.name
+
+
+def init_opt_state(params, ocfg: OptimizerConfig, parallel: ParallelConfig):
+    if _opt_name(ocfg, parallel) == "adafactor":
+        return adafactor_init(params, parallel.optimizer_dtype)
+    return adamw_init(params, parallel.optimizer_dtype)
+
+
+def effective_microbatches(parallel: ParallelConfig, global_batch: int,
+                           batch_shards: int) -> int:
+    """Largest m <= parallel.microbatches with (global_batch/m) divisible by
+    the number of batch shards."""
+    m = min(parallel.microbatches, max(1, global_batch // batch_shards))
+    while m > 1 and (global_batch % m or (global_batch // m) % batch_shards):
+        m -= 1
+    return max(1, m)
+
+
+def _shard_microbatch(tree):
+    def f(x):
+        axes = (None, "batch") + (None,) * (x.ndim - 2)
+        return shard(x, *axes)
+
+    return jax.tree.map(f, tree)
+
+
+def _constrain_like_params(tree, param_pspecs):
+    """Pin the gradient accumulator to the params' (FSDP/TP) shardings.
+    Without this XLA keeps the scan-carried accumulator REPLICATED and
+    lowers each microbatch's gradient reduction to a full f32 all-reduce
+    instead of a reduce-scatter (measured 2x collective bytes on
+    internlm2-20b — EXPERIMENTS.md §Perf)."""
+    if param_pspecs is None:
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.dist.sharding import get_mesh
+
+    mesh = get_mesh()
+    if mesh is None:
+        return tree
+    return jax.tree.map(
+        lambda g, s: jax.lax.with_sharding_constraint(g, NamedSharding(mesh, s)),
+        tree, param_pspecs,
+    )
+
+
+def make_train_step(
+    model: BaseModel, ocfg: OptimizerConfig, parallel: ParallelConfig,
+    batch_shards: int = 1, param_pspecs=None,
+) -> Callable:
+    accum_dtype = jnp.dtype(parallel.grad_accum_dtype)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        g_batch = jax.tree.leaves(batch)[0].shape[0]
+        m = effective_microbatches(parallel, g_batch, batch_shards)
+        if m > 1:
+            batch = jax.tree.map(
+                lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch
+            )
+            batch = _shard_microbatch(batch)
+
+            def mb_step(gsum, mb):
+                (loss, metrics), g = grad_fn(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), gsum, g
+                )
+                gsum = _constrain_like_params(gsum, param_pspecs)
+                return gsum, (loss, metrics)
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            gzero = _constrain_like_params(gzero, param_pspecs)
+            gsum, (losses, metrics) = jax.lax.scan(mb_step, gzero, batch)
+            grads = jax.tree.map(lambda g: g / m, gsum)
+            metrics = jax.tree.map(lambda x: x.mean(), metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(accum_dtype), grads)
+            grads = _constrain_like_params(grads, param_pspecs)
+
+        if parallel.grad_compression == "int8":
+            from repro.dist.collectives import compress_grads_int8
+
+            grads = compress_grads_int8(grads)
+
+        scale, gnorm = global_norm_scale(grads, ocfg.grad_clip)
+        if _opt_name(ocfg, parallel) == "adafactor":
+            params, opt_state = adafactor_update(
+                grads, opt_state, params, ocfg, grad_scale=scale)
+        else:
+            params, opt_state = adamw_update(
+                grads, opt_state, params, ocfg, grad_scale=scale)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_grad_step(
+    model: BaseModel, parallel: ParallelConfig, batch_shards: int = 1,
+    param_pspecs=None,
+) -> Callable:
+    """Phase 1 of the split train step: microbatch-accumulated gradients
+    only.  Splitting the optimizer update into its own program bounds peak
+    HBM to max(backprop phase, update phase) instead of their union —
+    what makes grok-1-314b fit a single 256-chip pod (§Perf)."""
+    accum_dtype = jnp.dtype(parallel.grad_accum_dtype)
+    grad_fn = jax.value_and_grad(lambda p, mb: model.loss(p, mb), has_aux=True)
+
+    def grad_step(params, batch):
+        g_batch = jax.tree.leaves(batch)[0].shape[0]
+        m = effective_microbatches(parallel, g_batch, batch_shards)
+        if m > 1:
+            batch = jax.tree.map(
+                lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch
+            )
+            batch = _shard_microbatch(batch)
+
+            def mb_step(gsum, mb):
+                (loss, metrics), g = grad_fn(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(accum_dtype), gsum, g)
+                gsum = _constrain_like_params(gsum, param_pspecs)
+                return gsum, metrics
+
+            gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            gzero = _constrain_like_params(gzero, param_pspecs)
+            grads, metrics = jax.lax.scan(mb_step, gzero, batch)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            metrics = jax.tree.map(lambda x: x.mean(), metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(accum_dtype), grads)
+            grads = _constrain_like_params(grads, param_pspecs)
+        return grads, metrics
+
+    return grad_step
+
+
+def make_update_step(ocfg: OptimizerConfig, parallel: ParallelConfig) -> Callable:
+    """Phase 2 of the split train step: clip + optimizer update."""
+
+    def update_step(params, opt_state, grads):
+        scale, gnorm = global_norm_scale(grads, ocfg.grad_clip)
+        if _opt_name(ocfg, parallel) == "adafactor":
+            params, opt_state = adafactor_update(
+                grads, opt_state, params, ocfg, grad_scale=scale)
+        else:
+            params, opt_state = adamw_update(
+                grads, opt_state, params, ocfg, grad_scale=scale)
+        return params, opt_state, gnorm
+
+    return update_step
+
+
+def make_prefill_step(model: BaseModel, *, window: int = 0) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, window=window)
+
+    return prefill_step
+
+
+def make_decode_step(model: BaseModel) -> Callable:
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return decode_step

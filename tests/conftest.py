@@ -1,0 +1,36 @@
+import os
+import sys
+
+# smoke tests and benches must see the REAL device count (1 CPU device);
+# only launch/dryrun.py sets xla_force_host_platform_device_count — and
+# multi-device tests spawn subprocesses that set it themselves.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "do not set the dry-run device flag globally"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_batch(cfg, b=2, s=64, seed=0):
+    r = np.random.default_rng(seed)
+    if cfg.frontend.kind == "frame":
+        return {
+            "frame_embeds": r.normal(size=(b, s, cfg.frontend.embed_dim)).astype(np.float32),
+            "labels": r.integers(0, cfg.vocab, (b, s)).astype(np.int32),
+            "mask": r.random((b, s)) < 0.3,
+        }
+    if cfg.frontend.kind == "patch":
+        p = cfg.frontend.num_positions
+        return {
+            "patch_embeds": r.normal(size=(b, p, cfg.frontend.embed_dim)).astype(np.float32),
+            "tokens": r.integers(0, cfg.vocab, (b, s - p)).astype(np.int32),
+        }
+    return {"tokens": r.integers(0, cfg.vocab, (b, s)).astype(np.int32)}

@@ -1,0 +1,68 @@
+"""Architecture registry: every assigned config loads, matches its
+published dimensions, and the analytic parameter count lands near the
+advertised model size."""
+import pytest
+
+from repro.config import SHAPES, shape_supported
+from repro.configs import ALIASES, ARCH_IDS, get_arch
+
+EXPECTED_B = {
+    "qwen2_5_3b": (2.5, 4.0),
+    "internlm2_20b": (17, 23),
+    "granite_8b": (7, 9.5),
+    "stablelm_3b": (2.3, 3.7),
+    "grok1_314b": (290, 340),
+    "dbrx_132b": (120, 145),
+    "internvl2_26b": (18, 23),     # LLM backbone only (ViT is a stub)
+    "hubert_xlarge": (0.8, 1.3),
+    "zamba2_2_7b": (2.2, 3.2),
+    "mamba2_1_3b": (1.1, 1.6),
+}
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_config_loads(arch_id):
+    spec = get_arch(arch_id)
+    assert spec.model.n_layers > 0
+    assert spec.smoke.n_layers <= 4
+    assert set(spec.parallel) == set(SHAPES)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_param_count_in_band(arch_id):
+    lo, hi = EXPECTED_B[arch_id]
+    n = get_arch(arch_id).model.param_count() / 1e9
+    assert lo <= n <= hi, f"{arch_id}: {n:.2f}B not in [{lo}, {hi}]"
+
+
+def test_aliases():
+    for alias in ALIASES:
+        assert get_arch(alias).arch_id in ARCH_IDS
+
+
+def test_applicability_rules():
+    hubert = get_arch("hubert_xlarge").model
+    assert not shape_supported(hubert, SHAPES["decode_32k"])[0]
+    assert not shape_supported(hubert, SHAPES["long_500k"])[0]
+    assert shape_supported(hubert, SHAPES["prefill_32k"])[0]
+    qwen = get_arch("qwen2_5_3b").model
+    assert not shape_supported(qwen, SHAPES["long_500k"])[0]
+    assert shape_supported(qwen, SHAPES["decode_32k"])[0]
+    for a in ("mamba2_1_3b", "zamba2_2_7b"):
+        m = get_arch(a).model
+        assert shape_supported(m, SHAPES["long_500k"])[0]
+
+
+def test_exact_published_dims():
+    m = get_arch("qwen2_5_3b").model
+    assert (m.n_layers, m.d_model, m.n_heads, m.n_kv_heads, m.d_ff, m.vocab) \
+        == (36, 2048, 16, 2, 11008, 151936)
+    assert m.qkv_bias
+    g = get_arch("grok1_314b").model
+    assert (g.moe.num_experts, g.moe.top_k) == (8, 2)
+    d = get_arch("dbrx_132b").model
+    assert (d.moe.num_experts, d.moe.top_k) == (16, 4)
+    z = get_arch("zamba2_2_7b").model
+    assert z.ssm.state_dim == 64 and z.hybrid_attn_every == 6
+    mb = get_arch("mamba2_1_3b").model
+    assert mb.ssm.state_dim == 128 and mb.family == "ssm"

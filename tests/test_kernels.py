@@ -1,0 +1,110 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret
+mode (the kernels target TPU; interpret executes the kernel bodies on
+CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 64)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (6, 1)])
+def test_flash_sweep(dtype, causal, window, hq, hkv):
+    b, s, d = 2, 128, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=32, block_k=32, interpret=True)
+    exp = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([64, 128, 256]), bq=st.sampled_from([32, 64]),
+       seed=st.integers(0, 500))
+def test_flash_block_shapes_property(s, bq, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (jax.random.normal(kk, (1, s, 2, 8), jnp.float32) for kk in ks)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bq,
+                              interpret=True)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_ssd_sweep(dtype, chunk):
+    b, s, h, p, n = 2, 128, 3, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, n)).astype(dtype)
+    cm = jax.random.normal(ks[4], (b, s, n)).astype(dtype)
+    out = ops.ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    exp = ref.ssd_ref(x, dt, a, bm, cm)
+    tol = 1e-3 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("counts", [[64, 17, 0, 33], [0, 0, 0, 0], [64, 64, 64, 64]])
+def test_gmm_sweep(dtype, counts):
+    e, c, d, f = 4, 64, 32, 48
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    x = jax.random.normal(ks[0], (e, c, d), jnp.float32).astype(dtype)
+    w = jax.random.normal(ks[1], (e, d, f), jnp.float32).astype(dtype)
+    cnt = jnp.asarray(counts, jnp.int32)
+    out = ops.grouped_matmul(x, w, cnt, block_c=16, block_d=16, block_f=16,
+                             interpret=True)
+    exp = ref.moe_gmm_ref(x, w, cnt)
+    tol = 2e-4 if dtype == jnp.float32 else 8e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# token window hash
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([4, 8]), windows=st.sampled_from([2, 4]),
+       window=st.sampled_from([32, 64]), seed=st.integers(0, 10_000))
+def test_hash_property(b, windows, window, seed):
+    toks = jax.random.randint(jax.random.PRNGKey(seed),
+                              (b, windows * window), 0, 152_000)
+    out = ops.window_hash(toks, window=window, block_b=4, interpret=True)
+    exp = ref.token_window_hash_ref(toks, window=window)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_hash_detects_duplicates_and_differences():
+    a = jnp.arange(128, dtype=jnp.int32)[None, :]
+    dup = jnp.concatenate([a, a], axis=0)
+    out = ops.window_hash(dup, window=64, block_b=2, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+    b = dup.at[1, 5].add(1)
+    out2 = ops.window_hash(b, window=64, block_b=2, interpret=True)
+    assert (np.asarray(out2[0]) != np.asarray(out2[1])).any()

@@ -1,0 +1,107 @@
+"""Layer-level correctness: triangle-pair-scan flash attention vs the
+naive oracle, RoPE properties, CE with vocab padding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 48])
+@pytest.mark.parametrize("chunk", [16, 64, 1024])
+def test_flash_vs_reference(causal, window, chunk):
+    key = jax.random.PRNGKey(0)
+    b, s, h, d = 2, 128, 3, 16
+    q, k, v = (jax.random.normal(kk, (b, s, h, d), jnp.float32)
+               for kk in jax.random.split(key, 3))
+    out = L.flash_attention(q, k, v, causal=causal, window=window, chunk=chunk)
+    exp = L.reference_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.sampled_from([32, 96, 160]),
+    h=st.integers(1, 4),
+    d=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_property(s, h, d, causal, seed):
+    key = jax.random.PRNGKey(seed)
+    q, k, v = (jax.random.normal(kk, (1, s, h, d), jnp.float32)
+               for kk in jax.random.split(key, 3))
+    out = L.flash_attention(q, k, v, causal=causal, chunk=32)
+    exp = L.reference_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_attention_is_convex_combination():
+    # softmax attention outputs lie in the convex hull of V rows: with
+    # constant V the output equals that constant
+    b, s, h, d = 1, 64, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, d))
+    v = jnp.ones((b, s, h, d))
+    out = L.flash_attention(q, k, v, causal=True, chunk=16)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    d = 32
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, d))
+    pos = jnp.arange(8)[None]
+    y = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, d))
+    dots = []
+    for p in (0, 5, 11):
+        qr = L.apply_rope(q, jnp.array([[p]]), 10000.0)
+        vr = L.apply_rope(v, jnp.array([[p + 3]]), 10000.0)
+        dots.append(float(jnp.sum(qr * vr)))
+    assert abs(dots[0] - dots[1]) < 1e-4 and abs(dots[1] - dots[2]) < 1e-4
+
+
+def test_repeat_kv():
+    x = jnp.arange(2 * 4 * 2 * 3).reshape(2, 4, 2, 3)
+    y = L.repeat_kv(x, 3)
+    assert y.shape == (2, 4, 6, 3)
+    np.testing.assert_array_equal(np.asarray(y[:, :, 0]), np.asarray(y[:, :, 2]))
+    np.testing.assert_array_equal(np.asarray(y[:, :, 3]), np.asarray(y[:, :, 5]))
+
+
+def test_cross_entropy_vocab_padding():
+    v_logical, v_padded = 50, 64
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 8, v_padded))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, v_logical)
+    nll_pad, _ = L.softmax_cross_entropy(logits, labels, v_logical)
+    nll_exact, _ = L.softmax_cross_entropy(logits[..., :v_logical], labels, v_logical)
+    assert abs(float(nll_pad) - float(nll_exact)) < 1e-5
+
+
+def test_decode_attention_matches_reference_tail():
+    b, s, hkv, d, hq = 2, 32, 2, 8, 4
+    key = jax.random.PRNGKey(3)
+    kc, vc = (jax.random.normal(kk, (b, s, hkv, d)) for kk in jax.random.split(key, 2))
+    q = jax.random.normal(jax.random.PRNGKey(4), (b, 1, hq, d))
+    length = jnp.array([s, s // 2])
+    out = L.decode_attention(q, kc, vc, length)
+    # oracle: full attention over the valid prefix, per batch row
+    for i, ln in enumerate([s, s // 2]):
+        qq = q[i:i + 1]
+        kk = L.repeat_kv(kc[i:i + 1, :ln], hq // hkv)
+        vv = L.repeat_kv(vc[i:i + 1, :ln], hq // hkv)
+        sco = jnp.einsum("bqhd,bkhd->bhqk", qq, kk) / np.sqrt(d)
+        p = jax.nn.softmax(sco, -1)
+        exp = jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+        np.testing.assert_allclose(np.asarray(out[i:i + 1]), np.asarray(exp),
+                                   atol=2e-5, rtol=2e-3)

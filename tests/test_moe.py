@@ -1,0 +1,119 @@
+"""MoE dispatch/combine invariants (XLA path — the shard_map path is
+verified against it in test_dist.py on a real multi-device mesh)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, MoEConfig
+from repro.models import moe as moe_lib
+from repro.models.param import init_params
+
+
+def _cfg(e=4, k=2, cf=8.0):
+    return ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=16, n_heads=2,
+        n_kv_heads=2, d_ff=32, vocab=64,
+        moe=MoEConfig(num_experts=e, top_k=k, capacity_factor=cf))
+
+
+def _params(cfg, key=0):
+    defs = moe_lib.moe_defs(cfg, 1)
+    p = init_params(defs, jax.random.PRNGKey(key))
+    return jax.tree.map(lambda a: a[0], p)   # drop the layer dim
+
+
+def _dense_reference(p, x, cfg):
+    """All-experts weighted combination (exact when capacity is ample)."""
+    n = x.shape[0] * x.shape[1]
+    xf = x.reshape(n, -1).astype(jnp.float32)
+    gates = jax.nn.softmax(xf @ p["router"], -1)
+    top_g, top_e = jax.lax.top_k(gates, cfg.moe.top_k)
+    top_g = top_g / top_g.sum(-1, keepdims=True)
+    g = jnp.einsum("nd,xdf->nxf", xf.astype(jnp.bfloat16), p["w_gate"])
+    u = jnp.einsum("nd,xdf->nxf", xf.astype(jnp.bfloat16), p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(jnp.bfloat16) * u
+    o = jnp.einsum("nxf,xfd->nxd", h, p["w_down"])
+    w = jnp.zeros((n, cfg.moe.num_experts))
+    w = jnp.take_along_axis(
+        w, top_e, axis=1
+    )  # placeholder; build combine weights via scatter below
+    w = jnp.zeros((n, cfg.moe.num_experts)).at[
+        jnp.arange(n)[:, None], top_e].set(top_g)
+    y = jnp.einsum("nx,nxd->nd", w.astype(o.dtype), o)
+    return y.reshape(x.shape)
+
+
+def test_moe_matches_dense_reference_with_ample_capacity():
+    cfg = _cfg(cf=8.0)
+    p = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16)).astype(jnp.bfloat16)
+    y, aux = moe_lib.moe_apply_xla(p, x, cfg)
+    exp = _dense_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(exp, np.float32), atol=0.06, rtol=0.06)
+    assert 0.0 < float(aux) < 1.0
+
+
+def test_moe_capacity_drops_reduce_output():
+    cfg_small = _cfg(cf=0.25)       # force drops
+    cfg_big = _cfg(cf=8.0)
+    p = _params(cfg_small)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 16)).astype(jnp.bfloat16)
+    y_small, _ = moe_lib.moe_apply_xla(p, x, cfg_small)
+    y_big, _ = moe_lib.moe_apply_xla(p, x, cfg_big)
+    # dropped tokens produce zero output rows; ample capacity never fewer
+    z_small = int((np.abs(np.asarray(y_small, np.float32)).sum(-1) < 1e-6).sum())
+    z_big = int((np.abs(np.asarray(y_big, np.float32)).sum(-1) < 1e-6).sum())
+    assert z_small > z_big
+
+
+def test_capacity_rounding():
+    cfg = _cfg()
+    c = moe_lib.capacity(1000, cfg)
+    assert c % 8 == 0 and c <= 1000
+    assert moe_lib.capacity(4, cfg) >= 4
+
+
+def test_expert_splitting_exact_equivalence():
+    """swiglu is separable over d_ff: an expert of d_ff=32 equals two
+    half-experts of d_ff=16 whose outputs sum — expert splitting must be
+    EXACT (it is what makes grok-1's 8 experts divide a 16-way axis)."""
+    import dataclasses
+
+    cfg1 = _cfg(e=4, k=2, cf=8.0)
+    cfg2 = dataclasses.replace(
+        cfg1, moe=dataclasses.replace(cfg1.moe, split_factor=2))
+    # f32 params: the equivalence is algebraically EXACT (bf16 only adds
+    # per-child rounding noise)
+    p1 = jax.tree.map(lambda a: a.astype(jnp.float32), _params(cfg1))
+    # split view of the same weights: f -> (2, f/2) children
+    e, d, f = 4, 16, 32
+    p2 = {
+        "router": p1["router"],
+        "w_gate": p1["w_gate"].reshape(e, d, 2, f // 2)
+                              .transpose(0, 2, 1, 3).reshape(2 * e, d, f // 2),
+        "w_up": p1["w_up"].reshape(e, d, 2, f // 2)
+                          .transpose(0, 2, 1, 3).reshape(2 * e, d, f // 2),
+        "w_down": p1["w_down"].reshape(e, 2, f // 2, d).reshape(2 * e, f // 2, d),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 16), jnp.float32)
+    y1, aux1 = jax.jit(lambda p, x: moe_lib.moe_apply_xla(p, x, cfg1))(p1, x)
+    y2, aux2 = jax.jit(lambda p, x: moe_lib.moe_apply_xla(p, x, cfg2))(p2, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(float(aux1), float(aux2), atol=1e-6)
+
+
+def test_moe_grads_flow_to_all_param_groups():
+    cfg = _cfg()
+    p = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 16)).astype(jnp.bfloat16)
+
+    def loss(p):
+        y, aux = moe_lib.moe_apply_xla(p, x, cfg)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    for k, v in g.items():
+        assert float(jnp.max(jnp.abs(v.astype(jnp.float32)))) > 0, k
