@@ -1,0 +1,92 @@
+"""repro.alerts — event-time windowed analytics + alert-rule engine.
+
+The downstream half the seed was missing: ingestion (repro.core) produces
+enriched documents; this subsystem turns them into *alerts*:
+
+  WindowOperator   event-time tumbling/sliding/session windows per key,
+                   monotonic watermark, allowed lateness, late events ->
+                   DeadLettersListener        (windows.py)
+  RuleEngine       threshold / rate-of-change / z-score rules over closed
+                   WindowAggregates -> Alert -> AlertSink   (rules.py)
+  window_reduce    Pallas kernel: batched per-(key, window) count/sum/
+                   sumsq/max segment reductions in one grid launch
+                   (repro.kernels.window_reduce, via repro.kernels.ops)
+  AnalyticsStage   the glue AlertMixPipeline / ServeEngine mount: observe
+                   documents, advance the watermark off the virtual clock,
+                   close windows, run rules          (this module)
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+from repro.alerts.rules import (
+    Alert,
+    AlertRule,
+    AlertSink,
+    RateOfChangeRule,
+    RuleEngine,
+    ThresholdRule,
+    ZScoreRule,
+)
+from repro.alerts.windows import (
+    SESSION,
+    SLIDING,
+    TUMBLING,
+    WindowAggregate,
+    WindowOperator,
+    WindowSpec,
+)
+
+
+class AnalyticsStage:
+    """One-stop analytics stage: key extraction -> window operator ->
+    rule engine.  Mounted by ``AlertMixPipeline`` (documents keyed by
+    channel, value = 1 event) and ``ServeEngine`` (latency metrics)."""
+
+    def __init__(self, spec: WindowSpec, rules: List[AlertRule], *,
+                 key_fn: Optional[Callable[[dict], str]] = None,
+                 value_fn: Optional[Callable[[dict], float]] = None,
+                 time_fn: Optional[Callable[[dict], float]] = None,
+                 watermark_lag_s: float = 0.0,
+                 dead_letters=None,
+                 alert_hook: Optional[Callable[[Alert], None]] = None):
+        self.operator = WindowOperator(
+            spec, watermark_lag_s=watermark_lag_s, dead_letters=dead_letters)
+        self.sink = AlertSink(hook=alert_hook)
+        self.engine = RuleEngine(rules, sink=self.sink)
+        self.key_fn = key_fn or (lambda doc: str(doc.get("channel", "all")))
+        self.value_fn = value_fn or (lambda doc: 1.0)
+        self.time_fn = time_fn or (lambda doc: float(doc["published_at"]))
+        self.closed_total = 0
+
+    def observe(self, doc: dict, *, now: float = 0.0) -> bool:
+        return self.operator.observe(
+            self.key_fn(doc), self.time_fn(doc), self.value_fn(doc), now=now)
+
+    def advance(self, now: float) -> List[Alert]:
+        """Advance the watermark to the pipeline's virtual clock, close
+        due windows, and evaluate rules.  Returns newly fired alerts."""
+        self.operator.advance_watermark(now)
+        closed = self.operator.poll_closed()
+        self.closed_total += len(closed)
+        if not closed:
+            return []
+        return self.engine.process(closed)
+
+    @property
+    def alerts(self) -> List[Alert]:
+        return self.sink.fired
+
+    def snapshot(self) -> dict:
+        return {"watermark": self.operator.watermark,
+                "open_windows": self.operator.open_windows(),
+                "windows_closed": self.closed_total,
+                "operator": dict(self.operator.stats),
+                "alerts": self.sink.snapshot()}
+
+
+__all__ = [
+    "Alert", "AlertRule", "AlertSink", "AnalyticsStage", "RateOfChangeRule",
+    "RuleEngine", "SESSION", "SLIDING", "TUMBLING", "ThresholdRule",
+    "WindowAggregate", "WindowOperator", "WindowSpec", "ZScoreRule",
+]

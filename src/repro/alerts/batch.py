@@ -1,0 +1,65 @@
+"""Bridge between host-side windowing and the Pallas segment reduction.
+
+``pack_events`` flattens (key, event_time, value) triples into the flat
+``values`` / ``seg_ids`` tensors ``repro.kernels.ops.window_reduce``
+consumes (one segment per distinct (key, window) slot — sliding windows
+replicate an event into every covering slot), and ``reduce_events`` turns
+the kernel's (S, 4) count/sum/sumsq/max lanes back into
+``WindowAggregate`` records.  This is the batch/replay path — reprocessing
+a backlog of documents at hardware speed — complementing the incremental
+``WindowOperator`` used on the live path; both produce identical
+aggregates (tested), so rules don't care which path fed them.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.alerts.windows import SESSION, WindowAggregate, WindowSpec
+
+Event = Tuple[str, float, float]          # (key, event_time, value)
+Slot = Tuple[str, float, float]           # (key, window_start, window_end)
+
+
+def pack_events(events: Sequence[Event], spec: WindowSpec):
+    """-> (values f32 (N,), seg_ids i32 (N,), slots list[Slot]).
+
+    N >= len(events): sliding windows fan each event out to every slot
+    covering it.  Session windows are data-driven and stay on the
+    incremental operator."""
+    if spec.kind == SESSION:
+        raise ValueError("session windows have no static slot layout; "
+                         "use WindowOperator")
+    slot_ids: Dict[Slot, int] = {}
+    vals: List[float] = []
+    segs: List[int] = []
+    for key, t, v in events:
+        for start, end in spec.assign(t):
+            slot = (key, start, end)
+            sid = slot_ids.setdefault(slot, len(slot_ids))
+            vals.append(v)
+            segs.append(sid)
+    slots = [s for s, _ in sorted(slot_ids.items(), key=lambda kv: kv[1])]
+    return (np.asarray(vals, np.float32), np.asarray(segs, np.int32), slots)
+
+
+def reduce_events(events: Sequence[Event], spec: WindowSpec, *,
+                  interpret=None) -> List[WindowAggregate]:
+    """One kernel launch -> WindowAggregates for every touched slot."""
+    from repro.kernels import ops   # lazy: keep host path jax-free
+
+    values, seg_ids, slots = pack_events(events, spec)
+    if not slots:
+        return []
+    lanes = np.asarray(ops.window_reduce(
+        values, seg_ids, len(slots), interpret=interpret))
+    out: List[WindowAggregate] = []
+    for sid, (key, start, end) in enumerate(slots):
+        cnt, sm, sq, mx = lanes[sid]
+        out.append(WindowAggregate(
+            key=key, window_start=start, window_end=end,
+            count=int(round(cnt)), sum=float(sm), sumsq=float(sq),
+            max=float(mx)))
+    out.sort(key=lambda a: (a.window_end, a.key))
+    return out

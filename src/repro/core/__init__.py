@@ -20,6 +20,25 @@ Two integrations make it load-bearing for the training framework:
                                 backpressure into the train loop
   repro.serve.engine          — continuous batching: the FeedRouter logic
                                 applied to inference requests
+
+Downstream analytics (repro.alerts) — the platform's alerting half:
+
+  AlertMixPipeline(analytics=True) mounts an AnalyticsStage after worker
+  enrichment; every indexed document flows in keyed by channel:
+
+    worker doc --> WindowOperator        event-time tumbling/sliding/
+                   (repro.alerts.windows) session windows per key with a
+                                          monotonic watermark; late events
+                                          -> DeadLettersListener
+               --> RuleEngine            threshold / rate-of-change /
+                   (repro.alerts.rules)   z-score rules over closed
+                                          WindowAggregates
+               --> AlertSink             fired Alert records (exactly one
+                                          evaluation per window close)
+
+  The batch/replay path (repro.alerts.batch + the Pallas window_reduce
+  kernel in repro.kernels) recomputes the same count/sum/sumsq/max
+  aggregates for a whole event backlog in one grid launch.
 """
 from repro.core.registry import StreamRegistry, StreamSource, StreamStatus
 from repro.core.queues import BoundedPriorityQueue, Message, QueueFullError

@@ -46,6 +46,15 @@ class PipelineConfig:
     channel_mix: Dict[str, float] = field(default_factory=lambda: {
         "news": 0.70, "custom_rss": 0.15, "facebook": 0.08, "twitter": 0.07,
     })
+    # ---- analytics stage (repro.alerts) ------------------------------------
+    analytics: bool = False            # mount the windowed-analytics stage
+    window_kind: str = "tumbling"      # tumbling | sliding | session
+    window_size_s: float = 300.0       # event-time window width
+    # the lateness budget must cover the fetch cadence: a document can be
+    # published right after one conditional GET and only be seen ~one
+    # feed_interval_s later, which is event-time lateness by construction
+    allowed_lateness_s: float = 300.0  # late events within this still count
+    watermark_lag_s: float = 60.0      # bounded out-of-orderness
 
 
 @dataclass
@@ -61,12 +70,15 @@ class Metrics:
     redirects_total: int = 0
     duplicates_total: int = 0
     malformed_total: int = 0
+    alerts_total: int = 0
+    windows_closed_total: int = 0
 
 
 class AlertMixPipeline:
     def __init__(self, cfg: PipelineConfig, *, seed: int = 0,
                  sinks: Optional[list] = None,
-                 item_hook: Optional[Callable] = None):
+                 item_hook: Optional[Callable] = None,
+                 analytics_rules: Optional[list] = None):
         self.cfg = cfg
         self.now = 0.0
         self.dead_letters = DeadLettersListener()
@@ -101,6 +113,22 @@ class AlertMixPipeline:
             lower=1, upper=max(64, cfg.workers * 4), seed=seed) if cfg.resizer else None
         self.pool = BalancingPool(self.mailbox, self._work, size=cfg.workers,
                                   resizer=resizer)
+
+        # optional windowed-analytics + alert-rule stage (repro.alerts):
+        # worker-enriched documents flow in keyed by channel; the pipeline's
+        # virtual clock drives the watermark; late events -> dead letters
+        self.analytics = None
+        if cfg.analytics or analytics_rules is not None:
+            from repro.alerts import AnalyticsStage, ThresholdRule, WindowSpec
+            rules = analytics_rules if analytics_rules is not None else [
+                ThresholdRule("volume_spike", metric="count", op=">=",
+                              threshold=50.0)]
+            self.analytics = AnalyticsStage(
+                WindowSpec(kind=cfg.window_kind, size_s=cfg.window_size_s,
+                           allowed_lateness_s=cfg.allowed_lateness_s),
+                rules,
+                watermark_lag_s=cfg.watermark_lag_s,
+                dead_letters=self.dead_letters)
 
         # populate the registry (incremental add — sources spread over the
         # first interval so picks don't all collide at t=0)
@@ -146,6 +174,8 @@ class AlertMixPipeline:
                 sink.index(item.guid, doc)
             if self.item_hook is not None:
                 self.item_hook(doc)
+            if self.analytics is not None:
+                self.analytics.observe(doc, now=self.now)
             accepted += 1
         self.metrics.indexed_total += accepted
         self.registry.mark_processed(
@@ -170,15 +200,27 @@ class AlertMixPipeline:
         if done:
             self.metrics.received.append((self.now, done))
             self.metrics.deleted.append((self.now, done))
+        alerts_fired = 0
+        if self.analytics is not None:
+            fired = self.analytics.advance(self.now)
+            alerts_fired = len(fired)
+            self.metrics.alerts_total += alerts_fired
+            self.metrics.windows_closed_total = self.analytics.closed_total
         return {"picked": picked, "pulled": pulled, "done": done,
                 "backlog": sum(len(q) for q in self.main_queues.values()),
-                "mailbox": len(self.mailbox), "pool": self.pool.size}
+                "mailbox": len(self.mailbox), "pool": self.pool.size,
+                "alerts": alerts_fired}
 
     def run_for(self, seconds: float, dt: float = 1.0, per_worker: int = 4):
         end = self.now + seconds
         while self.now < end:
             self.step(dt, per_worker=per_worker)
         return self.metrics
+
+    @property
+    def alerts(self) -> list:
+        """Alert records fired by the analytics stage (empty when off)."""
+        return [] if self.analytics is None else self.analytics.alerts
 
     # ---- fault tolerance ----------------------------------------------------
     def snapshot(self) -> dict:

@@ -47,15 +47,28 @@ class BoundedPriorityQueue:
         return self._size
 
     def offer(self, msg: Message) -> bool:
-        """Non-blocking enqueue. Overflow -> dead letters (False)."""
+        """Non-blocking enqueue.
+
+        Stats contract (audited; counts are per offer *attempt*):
+          * every call increments ``offered`` exactly once, and then
+            exactly one of ``accepted`` / ``dropped`` — so
+            ``accepted + dropped == offered`` always holds;
+          * on overflow the message is counted ``dropped`` exactly once,
+            then either published to the dead-letters listener (returns
+            False — the queue has consumed the message) or, with no
+            listener attached, ``QueueFullError`` is raised and the
+            CALLER still owns the message.  A retry after the exception
+            is a new offer attempt and is counted again (per-attempt, not
+            per-message).
+        """
         with self._lock:
             self.stats["offered"] += 1
             if self._size >= self.capacity:
-                self.stats["dropped"] += 1
-                if self.dead_letters is not None:
-                    self.dead_letters.publish(msg, reason="mailbox_overflow")
-                    return False
-                raise QueueFullError(f"capacity {self.capacity} exceeded")
+                self.stats["dropped"] += 1            # exactly once per attempt
+                if self.dead_letters is None:
+                    raise QueueFullError(f"capacity {self.capacity} exceeded")
+                self.dead_letters.publish(msg, reason="mailbox_overflow")
+                return False
             msg.seq = self._seq
             self._seq += 1
             lane = min(msg.priority, len(self._lanes) - 1)

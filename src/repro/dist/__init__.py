@@ -1,0 +1,8 @@
+"""Distribution layer: logical-axis sharding resolution + collectives.
+
+``sharding``     logical axes ("batch", "embed", "heads", ...) -> mesh
+                 axes, gated by the active ``ParallelConfig``; no-op when
+                 no mesh is active (CPU tests / single device).
+``collectives``  int8-compressed ring all-reduce + gradient compression.
+"""
+from repro.dist import collectives, sharding  # noqa: F401

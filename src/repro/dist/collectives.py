@@ -1,0 +1,47 @@
+"""Compressed collectives.
+
+``ring_allreduce_int8`` runs inside ``shard_map``: each of the N-1 ring
+hops forwards a peer's int8-quantized copy (per-tensor absmax scale), so
+every device accumulates its own exact shard plus quantized remote shards
+— 4x fewer bytes on the wire than f32 psum for ~0.4% per-term error.
+
+``compress_grads_int8`` is the jit-level analogue used by the train step
+when ``ParallelConfig.grad_compression == "int8"``: a quantize/dequantize
+round-trip per leaf models the wire precision of the compressed
+all-reduce while staying mesh-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(v: jax.Array):
+    scale = jnp.max(jnp.abs(v)).astype(jnp.float32) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(v.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def ring_allreduce_int8(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-reduce (sum) over ``axis_name`` with int8 payloads; call under
+    ``shard_map``.  Result dtype == input dtype."""
+    n = jax.lax.psum(1, axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    q, scale = _quantize(x)
+    acc = x.astype(jnp.float32)
+    for _ in range(n - 1):
+        q = jax.lax.ppermute(q, axis_name, perm)
+        scale = jax.lax.ppermute(scale, axis_name, perm)
+        acc = acc + q.astype(jnp.float32) * scale
+    return acc.astype(x.dtype)
+
+
+def compress_grads_int8(grads):
+    """Per-leaf int8 quantize/dequantize round-trip (wire-precision model
+    for the compressed gradient all-reduce)."""
+
+    def one(g):
+        q, scale = _quantize(g)
+        return (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+    return jax.tree.map(one, grads)

@@ -1,0 +1,114 @@
+"""Logical-axis sharding resolution.
+
+Models annotate every tensor dim with a LOGICAL axis name; this module
+resolves those to mesh axes under the active (mesh, MeshConfig,
+ParallelConfig) installed by ``use_mesh``:
+
+  batch                     -> ("pod", "data") / ("data",); + "model" when
+                               the model axis is repurposed as data ("dp")
+  embed                     -> "data"   (FSDP: weights sharded over data)
+  embed_tp, heads, ff,
+  vocab, expert, d_inner,
+  ssm_heads, kv_seq         -> "model"  (tensor parallel; None under "dp")
+  seq_sp                    -> "model"  when sequence_parallel is on
+  layers / None             -> replicated
+
+Every mapping is divisibility-guarded: a dim that doesn't divide evenly
+over the mapped mesh axes stays replicated rather than erroring (small
+smoke shapes on big meshes).  With no mesh active ``shard`` is identity,
+so single-device code never pays a constraint.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import MeshConfig, ParallelConfig
+
+_TP_AXES = frozenset(
+    {"embed_tp", "heads", "ff", "vocab", "expert", "d_inner", "ssm_heads",
+     "kv_seq"})
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.mesh = None
+        self.mesh_cfg: Optional[MeshConfig] = None
+        self.parallel: Optional[ParallelConfig] = None
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, mesh_cfg: MeshConfig, parallel: ParallelConfig):
+    prev = (_STATE.mesh, _STATE.mesh_cfg, _STATE.parallel)
+    _STATE.mesh, _STATE.mesh_cfg, _STATE.parallel = mesh, mesh_cfg, parallel
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh, _STATE.mesh_cfg, _STATE.parallel = prev
+
+
+def get_mesh():
+    return _STATE.mesh
+
+
+def get_parallel() -> ParallelConfig:
+    return _STATE.parallel if _STATE.parallel is not None else ParallelConfig()
+
+
+def _mesh_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_axis(axis: Optional[str], size: int, mesh=None,
+                 parallel: Optional[ParallelConfig] = None):
+    """Logical axis -> mesh axis name, tuple of names, or None.
+
+    ``size`` is the dim extent; mappings that don't divide it evenly
+    resolve to None (replicated) instead of failing to lower."""
+    if axis is None:
+        return None
+    mesh = mesh if mesh is not None else _STATE.mesh
+    if mesh is None:
+        return None
+    parallel = parallel if parallel is not None else get_parallel()
+    sizes = _mesh_sizes(mesh)
+    dp_role = parallel.model_axis_role == "dp"
+
+    if axis == "batch":
+        names = [a for a in ("pod", "data") if a in sizes]
+        if dp_role and "model" in sizes:
+            names.append("model")
+    elif axis == "embed":
+        names = ["data"] if "data" in sizes else []
+    elif axis == "seq_sp":
+        names = ["model"] if (parallel.sequence_parallel and not dp_role
+                              and "model" in sizes) else []
+    elif axis in _TP_AXES:
+        names = ["model"] if (not dp_role and "model" in sizes) else []
+    else:
+        names = []
+
+    total = 1
+    for a in names:
+        total *= sizes[a]
+    if not names or total <= 1 or size % total != 0:
+        return None
+    return names[0] if len(names) == 1 else tuple(names)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by per-dim logical axes.
+    Identity when no mesh is active."""
+    mesh = _STATE.mesh
+    if mesh is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = P(*(resolve_axis(a, s, mesh) for a, s in zip(axes, x.shape)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -8,10 +8,13 @@ from __future__ import annotations
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.moe_gmm import moe_gmm
 from repro.kernels.ssd_scan import ssd_scan_fwd
 from repro.kernels.token_hash import token_window_hash
+from repro.kernels.window_reduce import window_reduce_fwd
 
 
 def _default_interpret() -> bool:
@@ -46,4 +49,18 @@ def window_hash(tokens, *, window=64, block_b=8, interpret=None):
     if interpret is None:
         interpret = _default_interpret()
     return token_window_hash(tokens, window=window, block_b=block_b,
+                             interpret=interpret)
+
+
+def window_reduce(values, seg_ids, num_segments, *, block_s=128,
+                  block_n=1024, interpret=None):
+    """Per-segment count/sum/sumsq/max -> (num_segments, 4) f32 (the
+    alerts-stage windowed reduction; segment = flat (key, window) slot)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    if values.shape[0] == 0:           # empty launch: nothing to reduce
+        empty = jnp.zeros((num_segments, 4), jnp.float32)
+        return empty.at[:, 3].set(-jnp.inf)
+    return window_reduce_fwd(values, seg_ids, num_segments=num_segments,
+                             block_s=block_s, block_n=block_n,
                              interpret=interpret)

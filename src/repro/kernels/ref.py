@@ -30,6 +30,24 @@ def moe_gmm_ref(x, w, counts):
     return jnp.where(mask, o, 0).astype(x.dtype)
 
 
+def window_reduce_ref(values, seg_ids, num_segments):
+    """(num_segments, 4) f32 — count/sum/sumsq/max per segment; seg_id -1
+    is padding; empty segments report count 0 and max -inf."""
+    v = jnp.asarray(values, jnp.float32)
+    seg = jnp.asarray(seg_ids, jnp.int32)
+    valid = seg >= 0
+    sid = jnp.where(valid, seg, 0)
+    cnt = jnp.zeros(num_segments, jnp.float32).at[sid].add(
+        jnp.where(valid, 1.0, 0.0))
+    sm = jnp.zeros(num_segments, jnp.float32).at[sid].add(
+        jnp.where(valid, v, 0.0))
+    sq = jnp.zeros(num_segments, jnp.float32).at[sid].add(
+        jnp.where(valid, v * v, 0.0))
+    mx = jnp.full(num_segments, -jnp.inf, jnp.float32).at[sid].max(
+        jnp.where(valid, v, -jnp.inf))
+    return jnp.stack([cnt, sm, sq, mx], axis=-1)
+
+
 def token_window_hash_ref(tokens, *, window=64):
     P = np.uint32(1_000_003)
     SALT = np.uint32(0x9E3779B9)

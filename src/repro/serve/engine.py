@@ -47,13 +47,17 @@ def _bucket(n: int, mult: int = 16) -> int:
 
 class ServeEngine:
     def __init__(self, model: BaseModel, params, cfg: ServeConfig,
-                 *, eos_id: int = 2, clock: Callable[[], float] = time.monotonic):
+                 *, eos_id: int = 2, clock: Callable[[], float] = time.monotonic,
+                 analytics=None):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.eos_id = eos_id
         self.clock = clock
         self.dead_letters = DeadLettersListener()
+        # optional repro.alerts.AnalyticsStage: per-request latency metrics
+        # windowed on the request clock; fired alerts via fired_alerts()
+        self.analytics = analytics
         self.main_q = BoundedPriorityQueue(cfg.queue_capacity,
                                            dead_letters=self.dead_letters)
         self.prio_q = BoundedPriorityQueue(cfg.queue_capacity,
@@ -155,6 +159,8 @@ class ServeEngine:
         if self._should_admit(now):
             self._admit(now)
         if not any(self.active):
+            if self.analytics is not None:      # idle ticks still advance
+                self.analytics.advance(now)     # the latency watermark
             return 0
         logits, self.cache = self._decode(self.params, self.cache, self.tokens)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
@@ -175,9 +181,33 @@ class ServeEngine:
                 self.slot_req[slot] = None
                 self.active[slot] = False
                 self.finished_since_admit += 1
+                if self.analytics is not None:
+                    self.analytics.observe(
+                        {"channel": "serve", "published_at": now,
+                         "latency": now - req.arrived_at}, now=now)
         self.tokens = jnp.asarray(nxt[:, None])
         self.tokens_generated += produced
+        if self.analytics is not None:
+            self.analytics.advance(now)
         return produced
+
+    def fired_alerts(self) -> List:
+        """Every alert this engine has raised, as ``repro.alerts.Alert``
+        records: analytics-stage rule alerts (when an AnalyticsStage is
+        mounted) + dead-letter threshold alerts (wrapped so consumers see
+        one homogeneous type)."""
+        from repro.alerts import Alert
+
+        out: List = []
+        if self.analytics is not None:
+            out.extend(self.analytics.alerts)
+        for msg in self.dead_letters.alerts:
+            out.append(Alert(
+                rule="dead_letters", key="serve", window_start=0.0,
+                window_end=0.0, metric="count",
+                value=float(self.dead_letters.alert_threshold),
+                message=msg, severity="critical"))
+        return out
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):

@@ -4,7 +4,7 @@ backpressure -> dead letters, FeedRouter triggers, resizer hill-climb,
 dedup, end-to-end drain >= ingest, crash/restore."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (
     AlertMixPipeline,

@@ -2,7 +2,7 @@
 continuation, tokenizer properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data import HashTokenizer, StreamDataConfig, StreamDataPipeline
 

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -108,3 +108,95 @@ def test_hash_detects_duplicates_and_differences():
     b = dup.at[1, 5].add(1)
     out2 = ops.window_hash(b, window=64, block_b=2, interpret=True)
     assert (np.asarray(out2[0]) != np.asarray(out2[1])).any()
+
+
+def _py_rolling_hash(tokens, window):
+    """Independent pure-Python oracle (explicit uint32 wraparound)."""
+    out = []
+    for row in tokens:
+        hs = []
+        for wi in range(len(row) // window):
+            h = 0
+            for j in range(window):
+                h = (h * 1_000_003 + int(row[wi * window + j])
+                     + 0x9E3779B9) & 0xFFFFFFFF
+            hs.append(h)
+        out.append(hs)
+    return np.asarray(out, np.uint32)
+
+
+@pytest.mark.parametrize("window,b,s", [(32, 3, 96), (64, 5, 256), (16, 1, 64)])
+def test_hash_matches_pure_python(window, b, s):
+    toks = np.random.default_rng(7).integers(0, 152_000, (b, s)).astype(np.int32)
+    out = ops.window_hash(jnp.asarray(toks), window=window, block_b=1,
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  _py_rolling_hash(toks, window))
+
+
+def test_hash_dedup_round_trip():
+    """Window hashes -> DedupWindow: syndicated (duplicated) samples are
+    flagged, distinct samples are not, and eviction forgets old hashes."""
+    from repro.core.dedup import DedupWindow
+
+    rng = np.random.default_rng(11)
+    uniq = rng.integers(0, 152_000, (6, 128)).astype(np.int32)
+    batch = np.concatenate([uniq, uniq[2:3]], axis=0)   # row 6 dupes row 2
+    hashes = np.asarray(ops.window_hash(jnp.asarray(batch), window=64,
+                                        block_b=1, interpret=True))
+    keys = ["-".join(f"{h:08x}" for h in row) for row in hashes]
+    d = DedupWindow(window=1 << 10)
+    flags = [d.seen_before(k) for k in keys]
+    assert flags == [False] * 6 + [True]                # only the dupe hits
+    assert d.hits == 1 and d.misses == 6
+    # bounded memory: a window of 2 evicts the oldest hash
+    d2 = DedupWindow(window=2)
+    for k in keys[:4]:
+        d2.seen_before(k)
+    assert not d2.seen_before(keys[0])                  # evicted -> fresh
+
+
+# ---------------------------------------------------------------------------
+# window reduce (alerts-stage segment reduction)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 3000), s=st.integers(1, 500), seed=st.integers(0, 10_000))
+def test_window_reduce_random_layouts(n, s, seed):
+    """Randomized (key, window) layouts: kernel == reference to 1e-5."""
+    rng = np.random.default_rng(seed)
+    vals = (rng.normal(size=n) * 10).astype(np.float32)
+    segs = rng.integers(-1, s, size=n).astype(np.int32)   # -1 = padding
+    out = ops.window_reduce(jnp.asarray(vals), jnp.asarray(segs), s,
+                            interpret=True)
+    exp = ref.window_reduce_ref(vals, segs, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("block_s,block_n", [(8, 8), (128, 1024), (32, 256)])
+def test_window_reduce_block_shapes(block_s, block_n):
+    rng = np.random.default_rng(0)
+    n, s = 2048, 300
+    vals = rng.normal(size=n).astype(np.float32)
+    segs = rng.integers(0, s, size=n).astype(np.int32)
+    out = ops.window_reduce(jnp.asarray(vals), jnp.asarray(segs), s,
+                            block_s=block_s, block_n=block_n, interpret=True)
+    exp = ref.window_reduce_ref(vals, segs, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_window_reduce_empty_segments_and_lanes():
+    vals = jnp.asarray([2.0, 3.0, -1.0], jnp.float32)
+    segs = jnp.asarray([0, 0, 2], jnp.int32)
+    out = np.asarray(ops.window_reduce(vals, segs, 4, interpret=True))
+    np.testing.assert_allclose(out[0], [2.0, 5.0, 13.0, 3.0])   # cnt/sum/sq/max
+    np.testing.assert_allclose(out[2], [1.0, -1.0, 1.0, -1.0])
+    assert out[1][0] == 0.0 and out[1][3] == -np.inf            # empty segment
+    assert out[3][0] == 0.0 and out[3][3] == -np.inf
+    # zero events: defined result, no kernel launch
+    empty = np.asarray(ops.window_reduce(
+        jnp.zeros((0,), jnp.float32), jnp.zeros((0,), jnp.int32), 2,
+        interpret=True))
+    assert (empty[:, 0] == 0).all() and (empty[:, 3] == -np.inf).all()

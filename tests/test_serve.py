@@ -70,3 +70,44 @@ def test_queue_overflow_dead_letters(setup):
           for i in range(4)]
     assert ok == [True, True, False, False]
     assert eng.dead_letters.total == 2
+
+
+def test_engine_exposes_fired_alerts(setup):
+    """ServeEngine + AnalyticsStage: per-request latency metrics windowed
+    on the request clock; a latency-threshold rule surfaces through
+    fired_alerts()."""
+    from repro.alerts import AnalyticsStage, ThresholdRule, WindowSpec
+
+    cfg, model, params, tok = setup
+    fake_now = [0.0]
+    stage = AnalyticsStage(
+        WindowSpec(size_s=1.0, allowed_lateness_s=0.0),
+        [ThresholdRule("slow_requests", metric="max", op=">=", threshold=0.0)],
+        key_fn=lambda d: "serve",
+        value_fn=lambda d: d["latency"],
+        time_fn=lambda d: d["published_at"])
+    eng = ServeEngine(model, params, ServeConfig(
+        max_batch=2, max_seq_len=96, replenish_after=1,
+        replenish_timeout_s=0.01), eos_id=-1,
+        clock=lambda: fake_now[0], analytics=stage)
+    assert eng.fired_alerts() == []
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt_tokens=tok.encode("aa bb",
+                                                           add_eos=False),
+                           max_new_tokens=2, arrived_at=fake_now[0]))
+    for _ in range(40):
+        fake_now[0] += 0.3                        # latency accrues per step
+        eng.step()
+        if not any(eng.active) and not len(eng.main_q) + len(eng.prio_q):
+            break
+    fake_now[0] += 5.0
+    eng.step()                                    # close the latency windows
+    fired = eng.fired_alerts()
+    assert fired and all(a.rule == "slow_requests" for a in fired)
+    assert all(a.key == "serve" and a.value >= 0.0 for a in fired)
+    # dead-letter threshold alerts surface as the SAME Alert type
+    for _ in range(eng.dead_letters.alert_threshold):
+        eng.dead_letters.publish("x", reason="mailbox_overflow")
+    mixed = eng.fired_alerts()
+    assert any(a.rule == "dead_letters" for a in mixed)
+    assert all(hasattr(a, "rule") and hasattr(a, "severity") for a in mixed)
