@@ -4,6 +4,8 @@
   bench_alertmix  — Fig. 4: 200k-feed ingestion, drain vs ingest, peak rate
   bench_alerts    — windowed analytics: events/sec + watermark-to-alert
                     latency (p50/p99) + window_reduce kernel throughput
+  bench_delivery  — delivery layer: docs/sec vs fan-out width, flush-
+                    batch sweep, alert push latency p50/p99
   bench_scaling   — source-count scaling + resizer ablation
   bench_serving   — continuous vs static batching (FeedRouter admission)
   bench_train     — CPU train-step throughput per model family
@@ -22,6 +24,7 @@ def main() -> None:
     from benchmarks import (
         bench_alertmix,
         bench_alerts,
+        bench_delivery,
         bench_roofline,
         bench_scaling,
         bench_serving,
@@ -30,8 +33,8 @@ def main() -> None:
 
     rows: list = []
     failures = 0
-    for mod in (bench_alertmix, bench_alerts, bench_scaling, bench_serving,
-                bench_train, bench_roofline):
+    for mod in (bench_alertmix, bench_alerts, bench_delivery, bench_scaling,
+                bench_serving, bench_train, bench_roofline):
         try:
             mod.main(rows)
         except Exception:

@@ -73,6 +73,17 @@ class AnalyticsStage:
             return []
         return self.engine.process(closed)
 
+    def subscribe(self, callback=None, *, capacity: int = 256, key_fn=None):
+        """Stream alerts as they fire (push, not poll): callback mode or
+        a bounded-buffer iterator with per-rule backpressure.  See
+        ``repro.delivery.SubscriptionHub``."""
+        return self.sink.subscribe(callback, capacity=capacity, key_fn=key_fn)
+
+    @property
+    def hub(self):
+        """The AlertSink's SubscriptionHub (push delivery surface)."""
+        return self.sink.hub
+
     @property
     def alerts(self) -> List[Alert]:
         return self.sink.fired

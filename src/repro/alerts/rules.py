@@ -11,15 +11,20 @@ Three rule families cover the paper's alerting scenarios:
 and publishes fired ``Alert`` records to an ``AlertSink``.  Rules are
 stateful per (rule, key) but windows arrive exactly once (the operator's
 contract), so rule history never double-counts.
+
+``AlertSink`` is delivery-backed (repro.delivery): internally one
+``FanOutSink`` delivers each alert to a bounded in-memory log AND a
+``SubscriptionHub``, so consumers *subscribe* (callback or bounded
+iterator with per-rule backpressure) instead of polling the log.
 """
 from __future__ import annotations
 
 import operator
-import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.alerts.windows import WindowAggregate
+from repro.delivery import FanOutSink, Sink, Subscription, SubscriptionHub
 
 _OPS: Dict[str, Callable[[float, float], bool]] = {
     ">": operator.gt, ">=": operator.ge,
@@ -54,32 +59,66 @@ class Alert:
         return self.fired_at_watermark - self.window_end
 
 
-class AlertSink:
-    """Terminal sink for fired alerts (the subsystem's IndexSink analogue):
-    bounded in-memory log + per-rule counters + optional hook."""
+class _AlertLog(Sink):
+    """Terminal sink: bounded in-memory alert log + per-rule counters."""
 
-    def __init__(self, hook: Optional[Callable[[Alert], None]] = None,
-                 keep_last: int = 10_000):
-        self._lock = threading.Lock()
-        self.hook = hook
+    def __init__(self, keep_last: int = 10_000):
+        super().__init__("alert-log")
         self.fired: List[Alert] = []
         self.keep_last = keep_last
         self.by_rule: Dict[str, int] = {}
-        self.total = 0
 
-    def emit(self, alert: Alert) -> None:
+    def _write(self, batch: List) -> None:
         with self._lock:
-            self.total += 1
-            self.by_rule[alert.rule] = self.by_rule.get(alert.rule, 0) + 1
-            self.fired.append(alert)
+            for alert in batch:
+                self.by_rule[alert.rule] = self.by_rule.get(alert.rule, 0) + 1
+                self.fired.append(alert)
             if len(self.fired) > self.keep_last:
                 del self.fired[: len(self.fired) - self.keep_last]
+
+
+class AlertSink:
+    """Delivery pipeline for fired alerts: one ``FanOutSink`` pushes each
+    alert to (a) a bounded in-memory log (poll-compat: ``fired``,
+    ``by_rule``, ``total``) and (b) a ``SubscriptionHub`` so consumers
+    stream alerts as they fire via ``subscribe()``.  The legacy
+    single-alert ``emit(alert)`` signature is preserved for rules."""
+
+    def __init__(self, hook: Optional[Callable[[Alert], None]] = None,
+                 keep_last: int = 10_000):
+        self.hook = hook
+        self._log = _AlertLog(keep_last)
+        self.hub = SubscriptionHub(name="alert-hub")
+        self.pipe = FanOutSink([self._log, self.hub], name="alerts")
+
+    def emit(self, alert: Alert) -> None:
+        self.pipe.emit([alert])
         if self.hook is not None:
             self.hook(alert)
 
+    def subscribe(self, callback: Optional[Callable[[Alert], None]] = None,
+                  *, capacity: int = 256, key_fn=None) -> Subscription:
+        """Push surface: callback fires at emit time, or iterate the
+        returned Subscription (bounded per-rule buffers)."""
+        return self.hub.subscribe(callback, capacity=capacity, key_fn=key_fn)
+
+    # ---- poll-compat views over the log -----------------------------------
+    @property
+    def fired(self) -> List[Alert]:
+        return self._log.fired
+
+    @property
+    def by_rule(self) -> Dict[str, int]:
+        return self._log.by_rule
+
+    @property
+    def total(self) -> int:
+        return self._log.counters.emitted
+
     def snapshot(self) -> dict:
-        with self._lock:
-            return {"total": self.total, "by_rule": dict(self.by_rule)}
+        return {"total": self.total, "by_rule": dict(self.by_rule),
+                "subscribers": self.hub.subscriber_count,
+                "delivery": self.pipe.backend_stats()}
 
 
 class AlertRule:

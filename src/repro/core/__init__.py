@@ -15,6 +15,18 @@ An end-to-end multi-source streaming platform:
   Worker/dedup          conditional GET (etag/last-modified) + duplicate
                         detection
 
+Delivery (repro.delivery) — every producer's single egress:
+
+  AlertMixPipeline._work emits accepted documents through ONE
+  BatchingSink -> FanOutSink -> per-backend RetryingSink stack; the
+  terminal sinks (repro.core.sinks: IndexSink / JsonlSink / TokenSink)
+  implement the Sink protocol (emit(batch)/flush()/close() + health +
+  counters; index() remains as a one-release shim).  Failed backends
+  retry with exponential backoff and dead-letter after N attempts;
+  Metrics.delivery surfaces emitted/retried/dead_lettered/lag per
+  backend.  Alerts flow through the same layer (AlertSink fans out to a
+  log + a SubscriptionHub) so consumers subscribe instead of polling.
+
 Two integrations make it load-bearing for the training framework:
   repro.data.stream_pipeline  — multi-source training-data ingestion with
                                 backpressure into the train loop

@@ -6,8 +6,11 @@
     -> FeedRouter (replenish-to-optimal worker mailbox)
     -> BalancingPool workers (+ OptimalSizeExploringResizer)
          worker: conditional GET -> redirect handling -> dedup -> enrich
-                 -> multi-channel sinks; StreamsUpdater marks processed
-    -> DeadLettersListener monitors every bounded mailbox
+                 -> delivery layer (BatchingSink -> FanOutSink -> one
+                    RetryingSink per backend; repro.delivery);
+                 StreamsUpdater marks processed
+    -> DeadLettersListener monitors every bounded mailbox AND delivery
+       failures (reason="delivery_failed:<backend>")
 
 Runs against a VIRTUAL clock (``run_for``) so the paper's 24h/200k-source
 experiment replays in seconds, or incrementally via ``step``.
@@ -28,6 +31,7 @@ from repro.core.router import FeedRouter
 from repro.core.scheduler import CHANNELS, ChannelDistributor, Scheduler
 from repro.core.sinks import IndexSink
 from repro.core.sources import NOT_MODIFIED, SourceSimulator
+from repro.delivery import BatchingSink, FanOutSink, RetryingSink, as_sink
 
 
 @dataclass
@@ -55,6 +59,11 @@ class PipelineConfig:
     # feed_interval_s later, which is event-time lateness by construction
     allowed_lateness_s: float = 300.0  # late events within this still count
     watermark_lag_s: float = 60.0      # bounded out-of-orderness
+    # ---- delivery layer (repro.delivery) -----------------------------------
+    delivery_batch: int = 16           # records per backend write (1 = sync)
+    delivery_max_delay_s: float = 5.0  # virtual-time bound on buffering
+    delivery_retry_attempts: int = 3   # per-backend attempts before DLQ
+    delivery_retry_backoff_s: float = 2.0  # first backoff (then x2 each)
 
 
 @dataclass
@@ -72,6 +81,10 @@ class Metrics:
     malformed_total: int = 0
     alerts_total: int = 0
     windows_closed_total: int = 0
+    # delivery-layer counters, refreshed at flush_delivery (run_for does
+    # this at its cutoff): top-level emitted/pending plus
+    # {backend: emitted/retried/dead_lettered/lag/healthy}
+    delivery: dict = field(default_factory=dict)
 
 
 class AlertMixPipeline:
@@ -84,9 +97,30 @@ class AlertMixPipeline:
         self.dead_letters = DeadLettersListener()
         self.registry = StreamRegistry(lease_s=cfg.feed_interval_s * 2)
         self.sim = SourceSimulator(seed=seed)
-        self.sinks = sinks if sinks is not None else [IndexSink()]
         self.item_hook = item_hook
         self.metrics = Metrics()
+
+        # ---- delivery layer: every accepted document flows through ONE
+        # FanOutSink; each backend gets its own retry envelope (exponential
+        # backoff -> dead letters) and the whole fan-out sits behind a
+        # batching stage flushed by size or virtual time
+        self.sinks = list(sinks) if sinks is not None else [IndexSink()]
+        backends = []
+        for s in self.sinks:
+            terminal = as_sink(s)
+            backends.append(RetryingSink(
+                terminal,
+                max_attempts=cfg.delivery_retry_attempts,
+                backoff_s=cfg.delivery_retry_backoff_s,
+                dead_letters=self.dead_letters,
+                name=terminal.name))       # metrics key by the backend
+        self.fan_out = FanOutSink(backends, name="documents")
+        if cfg.delivery_batch > 1:
+            self.delivery = BatchingSink(
+                self.fan_out, max_batch=cfg.delivery_batch,
+                max_delay_s=cfg.delivery_max_delay_s)
+        else:
+            self.delivery = self.fan_out
 
         # one {main, priority} queue pair per channel (Fig. 2 routers)
         self.main_queues = {
@@ -158,6 +192,7 @@ class AlertMixPipeline:
         if res.redirected_from:
             self.metrics.redirects_total += 1      # follow the hop
         accepted = 0
+        out_batch = []
         for item in res.items:
             if item.malformed:
                 self.metrics.malformed_total += 1
@@ -170,13 +205,14 @@ class AlertMixPipeline:
             doc = {"title": item.title, "body": item.body,
                    "published_at": item.published_at, "sid": src.sid,
                    "channel": src.channel}
-            for sink in self.sinks:
-                sink.index(item.guid, doc)
+            out_batch.append((item.guid, doc))
             if self.item_hook is not None:
                 self.item_hook(doc)
             if self.analytics is not None:
                 self.analytics.observe(doc, now=self.now)
             accepted += 1
+        if out_batch:
+            self.delivery.emit(out_batch)
         self.metrics.indexed_total += accepted
         self.registry.mark_processed(
             src.sid, self.now, etag=res.etag, last_modified=res.last_modified)
@@ -195,6 +231,11 @@ class AlertMixPipeline:
         done = self.pool.step(self.now, per_worker=per_worker,
                               replenish=replenish)
         pulled = pulled_box[0]
+        # drive the delivery layer's virtual clock: time-based batch
+        # flushes and retry backoff both key off this tick (counters in
+        # Metrics.delivery refresh at flush_delivery / run_for cutoff,
+        # not per step — call delivery_stats() for a live view)
+        self.delivery.tick(self.now)
         if picked:
             self.metrics.sent.append((self.now, picked))
         if done:
@@ -215,7 +256,32 @@ class AlertMixPipeline:
         end = self.now + seconds
         while self.now < end:
             self.step(dt, per_worker=per_worker)
+        self.flush_delivery()
         return self.metrics
+
+    def flush_delivery(self) -> None:
+        """Force buffered/parked records out to every backend and refresh
+        the delivery counters (run_for does this at its cutoff so sinks
+        are complete up to ``now``)."""
+        self.delivery.flush()
+        self.metrics.delivery = self.delivery_stats()
+
+    def delivery_stats(self) -> dict:
+        """Per-backend delivery counters: emitted (records the terminal
+        sink accepted), retried, dead_lettered, lag, healthy."""
+        out = {"emitted": self.delivery.counters.emitted,
+               "pending": getattr(self.delivery, "pending", 0),
+               "backends": {}}
+        for key, st in self.fan_out.backend_stats().items():
+            out["backends"][key] = {
+                "emitted": st["terminal_emitted"],
+                "retried": st["retried"],
+                "dead_lettered": st["dead_lettered"],
+                "pending_retry": st.get("pending_retry", 0),
+                "lag": st["lag"],
+                "healthy": st["healthy"],
+            }
+        return out
 
     @property
     def alerts(self) -> list:

@@ -1,51 +1,143 @@
 """Multi-channel distribution sinks (the paper's Elasticsearch + delivery
-channels).  ``IndexSink`` is the in-memory ES stand-in; ``JsonlSink``
-persists to disk; ``TokenSink`` feeds the training data pipeline."""
+channels), all on the ``repro.delivery.Sink`` protocol: ``emit`` takes a
+batch of ``(doc_id, doc)`` records.  ``IndexSink`` is the in-memory ES
+stand-in; ``JsonlSink`` persists to disk (context manager, flush on
+close); ``TokenSink`` feeds the training data pipeline (tokenize + pack
+into fixed-length samples).
+
+``index(doc_id, doc)`` remains as a one-release compat shim — it
+forwards to ``emit`` — so pre-delivery callers keep working; new code
+should emit batches (directly or through the pipeline's FanOutSink).
+"""
 from __future__ import annotations
 
 import collections
 import json
 import os
 import threading
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.delivery import Sink
 
 
-class IndexSink:
-    """In-memory inverted index (Elasticsearch analogue)."""
-
-    def __init__(self):
-        self._docs: Dict[str, dict] = {}
-        self._terms: Dict[str, set] = collections.defaultdict(set)
-        self._lock = threading.Lock()
-        self.indexed = 0
+class DocumentSink(Sink):
+    """Base for document sinks: records are ``(doc_id, doc)`` pairs."""
 
     def index(self, doc_id: str, doc: dict) -> None:
-        with self._lock:
-            self._docs[doc_id] = doc
-            for term in str(doc.get("title", "")).split():
-                self._terms[term.lower()].add(doc_id)
-            self.indexed += 1
+        """Deprecated single-document shim; use ``emit([(id, doc)])``."""
+        self.emit([(doc_id, doc)])
+
+
+class IndexSink(DocumentSink):
+    """In-memory inverted index (Elasticsearch analogue)."""
+
+    def __init__(self, name: Optional[str] = None):
+        super().__init__(name)
+        self._docs: Dict[str, dict] = {}
+        self._terms: Dict[str, set] = collections.defaultdict(set)
+        self._index_lock = threading.Lock()
+
+    @property
+    def indexed(self) -> int:
+        return self.counters.emitted
+
+    def _write(self, batch: List) -> None:
+        with self._index_lock:
+            for doc_id, doc in batch:
+                self._docs[doc_id] = doc
+                for term in str(doc.get("title", "")).split():
+                    self._terms[term.lower()].add(doc_id)
 
     def search(self, term: str) -> List[dict]:
-        with self._lock:
+        with self._index_lock:
             return [self._docs[d] for d in self._terms.get(term.lower(), ())]
 
     def __len__(self) -> int:
         return len(self._docs)
 
 
-class JsonlSink:
-    def __init__(self, path: str):
+class JsonlSink(DocumentSink):
+    def __init__(self, path: str, name: Optional[str] = None):
+        super().__init__(name)
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         self.path = path
         self._fh = open(path, "a", encoding="utf-8")
-        self._lock = threading.Lock()
-        self.written = 0
+        self._write_lock = threading.Lock()
 
-    def index(self, doc_id: str, doc: dict) -> None:
-        with self._lock:
-            self._fh.write(json.dumps({"_id": doc_id, **doc}) + "\n")
-            self.written += 1
+    @property
+    def written(self) -> int:
+        return self.counters.emitted
+
+    def _write(self, batch: List) -> None:
+        with self._write_lock:
+            for doc_id, doc in batch:
+                self._fh.write(json.dumps({"_id": doc_id, **doc}) + "\n")
+
+    def __len__(self) -> int:
+        return self.counters.emitted
+
+    def flush(self) -> None:
+        super().flush()
+        if not self._fh.closed:
+            self._fh.flush()
 
     def close(self) -> None:
+        if self.closed:
+            return
+        super().close()           # flushes buffered lines to disk first
         self._fh.close()
+
+
+class TokenSink(DocumentSink):
+    """Feeds the training data plane: tokenizes each document's
+    title+body and packs the token stream into fixed-length samples
+    (the delivery-layer form of ``StreamDataPipeline``'s packing loop).
+
+    State (``state()``/``load_state()``) covers the packing remainder
+    and the sample buffer, so data-plane checkpoints reproduce the
+    exact token stream.
+    """
+
+    def __init__(self, tokenizer, seq_len: int, name: Optional[str] = None):
+        super().__init__(name)
+        self.tokenizer = tokenizer
+        self.seq_len = seq_len
+        self.samples: Deque[np.ndarray] = collections.deque()
+        self._remainder: List[int] = []
+        self.samples_emitted = 0
+
+    @property
+    def docs_consumed(self) -> int:
+        return self.counters.emitted
+
+    def _write(self, batch: List) -> None:
+        s = self.seq_len
+        for _doc_id, doc in batch:
+            ids = self.tokenizer.encode(
+                str(doc.get("title", "")) + " " + str(doc.get("body", "")))
+            self._remainder.extend(ids)
+            while len(self._remainder) >= s:
+                self.samples.append(np.asarray(self._remainder[:s], np.int32))
+                del self._remainder[:s]
+                self.samples_emitted += 1
+
+    def pop_samples(self, n: int) -> List[np.ndarray]:
+        return [self.samples.popleft() for _ in range(min(n, len(self.samples)))]
+
+    def __len__(self) -> int:
+        return len(self.samples)
+
+    def state(self) -> dict:
+        return {"remainder": list(self._remainder),
+                "buffer": [b.tolist() for b in self.samples],
+                "samples_emitted": self.samples_emitted,
+                "docs_consumed": self.docs_consumed}
+
+    def load_state(self, st: dict) -> None:
+        self._remainder = list(st["remainder"])
+        self.samples = collections.deque(
+            np.asarray(b, np.int32) for b in st["buffer"])
+        self.samples_emitted = st["samples_emitted"]
+        self.counters.emitted = st["docs_consumed"]

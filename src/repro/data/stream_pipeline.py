@@ -2,9 +2,15 @@
 
 The thousands of "news feeds" become corpus shards; the AlertMix pipeline
 (scheduler -> priority queues -> FeedRouter -> balancing pool -> dedup)
-ingests documents which are tokenized and PACKED into fixed-length
-samples.  The train loop pulls batches; backpressure is physical: the
-pipeline is only stepped while the bounded sample buffer has room.
+delivers documents through the unified delivery layer into a
+``TokenSink`` (repro.core.sinks), which tokenizes and PACKS them into
+fixed-length samples.  The train loop pulls batches; backpressure is
+physical: the pipeline is only stepped while the bounded sample buffer
+has room.
+
+Delivery is configured synchronous (``delivery_batch=1``) so the token
+stream is bitwise reproducible relative to a checkpoint: a batching
+stage would leave in-flight documents outside the snapshot.
 
 Restart safety: ``state()`` captures the registry snapshot + packing
 remainder + sample buffer; restoring replays nothing and loses nothing
@@ -13,13 +19,13 @@ relative to a checkpoint).
 """
 from __future__ import annotations
 
-import collections
 from dataclasses import dataclass
-from typing import Deque, Dict, List, Optional
+from typing import Dict
 
 import numpy as np
 
 from repro.core.pipeline import AlertMixPipeline, PipelineConfig
+from repro.core.sinks import TokenSink
 from repro.data.tokenizer import HashTokenizer
 
 
@@ -37,31 +43,30 @@ class StreamDataPipeline:
     def __init__(self, cfg: StreamDataConfig, *, seed: int = 0):
         self.cfg = cfg
         self.tokenizer = HashTokenizer(cfg.vocab_size)
-        self._buffer: Deque[np.ndarray] = collections.deque()
-        self._remainder: List[int] = []
-        self.samples_emitted = 0
-        self.docs_consumed = 0
+        self.tokens = TokenSink(self.tokenizer, cfg.seq_len)
         self.pipeline = AlertMixPipeline(
             PipelineConfig(
                 num_sources=cfg.num_sources,
                 feed_interval_s=cfg.feed_interval_s,
                 pick_interval_s=min(5.0, cfg.feed_interval_s / 4),
+                delivery_batch=1,           # synchronous: checkpoint-exact
             ),
             seed=seed,
-            sinks=[],                       # tokens are the only sink
-            item_hook=self._on_doc,
+            sinks=[self.tokens],            # tokens are the only backend
         )
 
-    # ---- document -> packed samples ----------------------------------------
-    def _on_doc(self, doc: dict) -> None:
-        self.docs_consumed += 1
-        ids = self.tokenizer.encode(doc["title"] + " " + doc["body"])
-        self._remainder.extend(ids)
-        s = self.cfg.seq_len
-        while len(self._remainder) >= s:
-            self._buffer.append(np.asarray(self._remainder[:s], np.int32))
-            del self._remainder[:s]
-            self.samples_emitted += 1
+    # counters + buffer views delegate to the TokenSink
+    @property
+    def samples_emitted(self) -> int:
+        return self.tokens.samples_emitted
+
+    @property
+    def docs_consumed(self) -> int:
+        return self.tokens.docs_consumed
+
+    @property
+    def _buffer(self):
+        return self.tokens.samples
 
     # ---- batch interface -----------------------------------------------------
     def next_batch(self, batch_size: int, max_virtual_s: float = 1e7
@@ -69,32 +74,25 @@ class StreamDataPipeline:
         """Blocks (advances virtual time) until a full batch is buffered.
         Backpressure: the pipeline only steps while the buffer has room."""
         waited = 0.0
-        while len(self._buffer) < batch_size:
-            if len(self._buffer) >= self.cfg.buffer_samples:
+        buf = self.tokens.samples
+        while len(buf) < batch_size:
+            if len(buf) >= self.cfg.buffer_samples:
                 break                        # buffer full: stop ingesting
             self.pipeline.step(self.cfg.virtual_dt)
             waited += self.cfg.virtual_dt
             if waited > max_virtual_s:
                 raise TimeoutError(
-                    f"pipeline produced {len(self._buffer)}/{batch_size} "
+                    f"pipeline produced {len(buf)}/{batch_size} "
                     f"samples in {waited}s virtual")
-        tokens = np.stack([self._buffer.popleft() for _ in range(batch_size)])
+        tokens = np.stack([buf.popleft() for _ in range(batch_size)])
         return {"tokens": tokens}
 
     # ---- checkpointable state -------------------------------------------------
     def state(self) -> dict:
-        return {
-            "pipeline": self.pipeline.snapshot(),
-            "remainder": list(self._remainder),
-            "buffer": [b.tolist() for b in self._buffer],
-            "samples_emitted": self.samples_emitted,
-            "docs_consumed": self.docs_consumed,
-        }
+        st = self.tokens.state()
+        st["pipeline"] = self.pipeline.snapshot()
+        return st
 
     def load_state(self, st: dict) -> None:
         self.pipeline.restore_registry(st["pipeline"])
-        self._remainder = list(st["remainder"])
-        self._buffer = collections.deque(
-            np.asarray(b, np.int32) for b in st["buffer"])
-        self.samples_emitted = st["samples_emitted"]
-        self.docs_consumed = st["docs_consumed"]
+        self.tokens.load_state(st)

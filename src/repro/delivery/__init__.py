@@ -1,0 +1,36 @@
+"""repro.delivery — the unified delivery layer.
+
+The paper fans every processed document out to Elasticsearch *and*
+multiple delivery channels, and pushes alerts to consumers as they
+fire.  This package makes delivery a first-class layer with ONE
+abstraction instead of three ad-hoc surfaces:
+
+  Sink              emit(batch) / flush() / close() + per-sink health
+                    and counters                          (base.py)
+  BatchingSink      size- and virtual-time-based flush    (wrappers.py)
+  RetryingSink      exponential backoff, dead-letters after N attempts
+  FanOutSink        N backends, per-backend failure isolation + lag
+  SubscriptionHub   push subscriptions: callbacks + bounded-buffer
+                    iterators with per-rule backpressure  (hub.py)
+
+Producers (``AlertMixPipeline._work``, ``RuleEngine`` via ``AlertSink``,
+``ServeEngine``) all emit through this layer; terminal sinks live where
+their data does (``repro.core.sinks`` for documents/tokens, the alert
+log inside ``repro.alerts.rules``).
+"""
+from repro.delivery.base import (
+    CollectingSink,
+    LegacySinkAdapter,
+    Sink,
+    SinkClosedError,
+    SinkCounters,
+    as_sink,
+)
+from repro.delivery.hub import Subscription, SubscriptionHub
+from repro.delivery.wrappers import BatchingSink, FanOutSink, RetryingSink
+
+__all__ = [
+    "BatchingSink", "CollectingSink", "FanOutSink", "LegacySinkAdapter",
+    "RetryingSink", "Sink", "SinkClosedError", "SinkCounters",
+    "Subscription", "SubscriptionHub", "as_sink",
+]

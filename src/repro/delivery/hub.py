@@ -1,0 +1,168 @@
+"""SubscriptionHub — the delivery layer's push surface.
+
+Alerts (or any records) emitted into the hub are pushed to every
+subscriber immediately; consumers stop polling.  Two consumption modes:
+
+  callback   subscribe(callback=fn) — fn(record) runs synchronously at
+             emit time; a raising callback is counted, never propagated
+             (a broken consumer cannot take down the rule engine)
+  iterator   subscribe() — a Subscription with per-key bounded buffers;
+             iterate or drain() at leisure.  Backpressure is non-
+             blocking: when a key's buffer is full the OLDEST record is
+             dropped and counted, so a slow subscriber loses its own
+             tail instead of stalling the producer, and one noisy rule
+             cannot evict another rule's records (per-rule isolation —
+             the default key is the record's ``rule`` attribute).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Dict, List, Optional
+
+from repro.delivery.base import Sink
+
+
+def _default_key(record) -> str:
+    return str(getattr(record, "rule", "_"))
+
+
+class Subscription:
+    """One consumer's view of a hub: bounded per-key buffers + counters.
+    Iterating yields (and removes) currently buffered records."""
+
+    def __init__(self, hub: "SubscriptionHub",
+                 callback: Optional[Callable] = None, *,
+                 capacity: int = 256,
+                 key_fn: Optional[Callable[[object], str]] = None):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.hub = hub
+        self.callback = callback
+        self.capacity = capacity
+        self.key_fn = key_fn or _default_key
+        self.delivered = 0
+        self.errors = 0
+        self.dropped: Dict[str, int] = collections.defaultdict(int)
+        self.closed = False
+        self._buffers: Dict[str, collections.deque] = {}
+        self._order: collections.deque = collections.deque()  # arrival keys
+        self._lock = threading.Lock()
+
+    # ---- producer side (hub only) -----------------------------------------
+    def _push(self, record) -> None:
+        if self.closed:
+            return
+        if self.callback is not None:
+            try:
+                self.callback(record)
+            except Exception:
+                self.errors += 1
+            else:
+                self.delivered += 1
+            return
+        key = self.key_fn(record)
+        with self._lock:
+            buf = self._buffers.get(key)
+            if buf is None:
+                buf = self._buffers[key] = collections.deque()
+            if len(buf) >= self.capacity:      # bounded: drop this key's
+                buf.popleft()                  # oldest, never block
+                self.dropped[key] += 1
+                # the dropped record held this key's EARLIEST arrival
+                # slot; retire that slot so cross-key order stays true
+                # (the new record queues at the back like any arrival)
+                try:
+                    self._order.remove(key)
+                except ValueError:
+                    pass
+            buf.append(record)
+            self._order.append(key)
+            self.delivered += 1
+
+    # ---- consumer side -----------------------------------------------------
+    def pop(self):
+        """Oldest buffered record across keys (arrival order), or None."""
+        with self._lock:
+            while self._order:
+                key = self._order.popleft()
+                buf = self._buffers.get(key)
+                if buf:
+                    return buf.popleft()
+            return None
+
+    def drain(self, max_items: Optional[int] = None) -> List:
+        out: List = []
+        while max_items is None or len(out) < max_items:
+            rec = self.pop()
+            if rec is None:
+                break
+            out.append(rec)
+        return out
+
+    def __iter__(self):
+        while True:
+            rec = self.pop()
+            if rec is None:
+                return
+            yield rec
+
+    def __len__(self) -> int:
+        with self._lock:
+            return sum(len(b) for b in self._buffers.values())
+
+    def dropped_total(self) -> int:
+        return sum(self.dropped.values())
+
+    def close(self) -> None:
+        self.closed = True
+        self.hub.unsubscribe(self)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+
+class SubscriptionHub(Sink):
+    """A Sink that pushes every emitted record to all subscribers."""
+
+    def __init__(self, name: Optional[str] = None):
+        super().__init__(name or "hub")
+        self._subs: List[Subscription] = []
+        self._subs_lock = threading.Lock()
+
+    def subscribe(self, callback: Optional[Callable] = None, *,
+                  capacity: int = 256,
+                  key_fn: Optional[Callable[[object], str]] = None
+                  ) -> Subscription:
+        sub = Subscription(self, callback, capacity=capacity, key_fn=key_fn)
+        with self._subs_lock:
+            self._subs.append(sub)
+        return sub
+
+    def unsubscribe(self, sub: Subscription) -> None:
+        with self._subs_lock:
+            if sub in self._subs:
+                self._subs.remove(sub)
+
+    @property
+    def subscriber_count(self) -> int:
+        with self._subs_lock:
+            return len(self._subs)
+
+    def _write(self, batch: List) -> None:
+        with self._subs_lock:
+            subs = list(self._subs)
+        for record in batch:
+            for sub in subs:
+                sub._push(record)
+
+    def stats(self) -> dict:
+        base = super().stats()
+        with self._subs_lock:
+            subs = list(self._subs)
+        base["subscribers"] = len(subs)
+        base["dropped"] = sum(s.dropped_total() for s in subs)
+        return base

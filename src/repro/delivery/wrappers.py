@@ -1,0 +1,279 @@
+"""Composable Sink wrappers: batching, retry-with-backoff, fan-out.
+
+Each wrapper IS a Sink, so they stack in any order; the canonical
+pipeline arrangement is
+
+    BatchingSink( FanOutSink([ RetryingSink(backend), ... ]) )
+
+batch upstream once, then deliver to every backend with per-backend
+retry isolation.  All time-driven behaviour (delayed flush, backoff)
+runs off ``tick(now)`` so it replays deterministically under the
+pipeline's virtual clock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.delivery.base import Sink
+
+
+class BatchingSink(Sink):
+    """Buffers records and forwards fixed-size batches to ``inner``.
+
+    Flush triggers (the FeedRouter's count + timeout logic applied to
+    writes):
+      size   buffered >= max_batch  -> forward immediately (inside emit)
+      time   a record has waited >= max_delay_s of virtual time
+             (checked on tick(now)) -> forward the partial batch
+    """
+
+    def __init__(self, inner: Sink, *, max_batch: int = 64,
+                 max_delay_s: Optional[float] = None,
+                 name: Optional[str] = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        super().__init__(name or f"batching({inner.name})")
+        self.inner = inner
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self._buf: List = []
+        self._buffered_since: Optional[float] = None
+        self._now = 0.0
+
+    @property
+    def pending(self) -> int:
+        return len(self._buf)
+
+    def _write(self, batch: List) -> None:
+        if not self._buf:
+            # delay clock starts when the record is buffered (at the
+            # last-known tick time), not at the next tick
+            self._buffered_since = self._now
+        self._buf.extend(batch)
+        while len(self._buf) >= self.max_batch:
+            # remove only after inner accepts: a raising inner leaves the
+            # chunk buffered, so no record is lost to a transient failure
+            self.inner.emit(self._buf[:self.max_batch])
+            del self._buf[:self.max_batch]
+        if not self._buf:
+            self._buffered_since = None
+
+    def tick(self, now: float) -> None:
+        self._now = max(self._now, now)
+        self.inner.tick(now)
+        if not self._buf:
+            self._buffered_since = None
+            return
+        if self._buffered_since is None:
+            self._buffered_since = self._now
+        if (self.max_delay_s is not None
+                and self._now - self._buffered_since >= self.max_delay_s):
+            self._drain()
+
+    def _drain(self) -> None:
+        if self._buf:
+            self.inner.emit(list(self._buf))
+            self._buf.clear()
+        self._buffered_since = None
+
+    def flush(self) -> None:
+        super().flush()
+        self._drain()
+        self.inner.flush()
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        super().close()          # flushes the buffer through inner
+        self.inner.close()
+
+
+@dataclass
+class _PendingRetry:
+    batch: List
+    attempts: int
+    not_before: float
+
+
+class RetryingSink(Sink):
+    """Absorbs ``inner`` failures: a failed batch is parked and re-sent
+    with exponential backoff (virtual time, driven by ``tick``); after
+    ``max_attempts`` total attempts every record in the batch is routed
+    to the DeadLettersListener under ``delivery_failed:<inner-name>``.
+
+    ``emit`` never raises on inner failure — that is the isolation
+    contract FanOutSink relies on.  Consequently this wrapper's own
+    ``counters.emitted`` means records ACCEPTED into the envelope
+    (delivered or parked or eventually dead-lettered), and its health
+    reflects the wrapped backend's, not the (always-succeeding)
+    envelope's: during a total outage ``healthy`` is False and
+    ``inner.counters.emitted`` shows what actually landed.
+    """
+
+    def __init__(self, inner: Sink, *, max_attempts: int = 4,
+                 backoff_s: float = 1.0, backoff_factor: float = 2.0,
+                 max_backoff_s: float = 60.0, dead_letters=None,
+                 name: Optional[str] = None):
+        if max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        super().__init__(name or f"retrying({inner.name})")
+        self.inner = inner
+        self.max_attempts = max_attempts
+        self.backoff_s = backoff_s
+        self.backoff_factor = backoff_factor
+        self.max_backoff_s = max_backoff_s
+        self.dead_letters = dead_letters
+        self._pending: List[_PendingRetry] = []
+        self._now = 0.0
+
+    @property
+    def pending_batches(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending_records(self) -> int:
+        return sum(len(p.batch) for p in self._pending)
+
+    @property
+    def healthy(self) -> bool:
+        # a retry envelope is only as healthy as the backend it shields
+        return self.inner.healthy
+
+    def health(self) -> dict:
+        h = self.inner.health()
+        h["pending_retry"] = self.pending_records
+        return h
+
+    def _backoff(self, attempts: int) -> float:
+        return min(self.max_backoff_s,
+                   self.backoff_s * self.backoff_factor ** (attempts - 1))
+
+    def _write(self, batch: List) -> None:
+        try:
+            self.inner.emit(batch)
+        except Exception:
+            self._park(list(batch), attempts=1)
+
+    def _park(self, batch: List, attempts: int) -> None:
+        if attempts >= self.max_attempts:
+            self._dead_letter(batch)
+        else:
+            self._pending.append(_PendingRetry(
+                batch, attempts, self._now + self._backoff(attempts)))
+
+    def _dead_letter(self, batch: List) -> None:
+        with self._lock:
+            self.counters.dead_lettered += len(batch)
+        if self.dead_letters is not None:
+            for record in batch:
+                self.dead_letters.publish(
+                    record, reason=f"delivery_failed:{self.inner.name}")
+
+    def _attempt(self, pending: List[_PendingRetry]) -> None:
+        for p in pending:
+            with self._lock:
+                self.counters.retried += 1
+            try:
+                self.inner.emit(p.batch)
+            except Exception:
+                self._park(p.batch, attempts=p.attempts + 1)
+
+    def tick(self, now: float) -> None:
+        self._now = max(self._now, now)
+        self.inner.tick(now)
+        due = [p for p in self._pending if p.not_before <= self._now]
+        if due:
+            self._pending = [p for p in self._pending if p.not_before > self._now]
+            self._attempt(due)
+
+    def flush(self) -> None:
+        """One immediate re-attempt for everything parked (backoff
+        ignored), then flush inner.  Batches that fail again stay parked
+        unless they exhausted their attempts."""
+        super().flush()
+        pending, self._pending = self._pending, []
+        self._attempt(pending)
+        self.inner.flush()
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        super().close()          # final retry pass via flush
+        for p in self._pending:  # whatever survives close is given up
+            self._dead_letter(p.batch)
+        self._pending = []
+        self.inner.close()
+
+
+class FanOutSink(Sink):
+    """Delivers every batch to N backends with per-backend failure
+    isolation: one backend raising never stops the others, never raises
+    to the producer, and its failed records go to dead letters (unless a
+    RetryingSink wrapper already absorbed the failure).
+
+    Lag metrics: ``lag()`` reports, per backend, how many records the
+    fan-out accepted that the backend's TERMINAL sink has not — a
+    permanently failing backend shows monotonically growing lag even
+    behind a RetryingSink envelope (whose emit never raises), because
+    lag is measured at ``backend.terminal``, not at the wrapper.
+    """
+
+    def __init__(self, backends: Sequence[Sink], *, dead_letters=None,
+                 name: Optional[str] = None):
+        super().__init__(name or "fanout")
+        self.backends = list(backends)
+        self.dead_letters = dead_letters
+        # unique display keys even when two backends share a class name
+        keys: List[str] = []
+        for i, b in enumerate(self.backends):
+            key = b.name
+            if key in keys:
+                key = f"{key}[{i}]"
+            keys.append(key)
+        self._keys = keys
+        self.offered = 0
+        self.delivered: Dict[str, int] = {k: 0 for k in keys}
+        self.failures: Dict[str, int] = {k: 0 for k in keys}
+
+    def _write(self, batch: List) -> None:
+        self.offered += len(batch)
+        for key, backend in zip(self._keys, self.backends):
+            try:
+                backend.emit(batch)
+            except Exception:
+                self.failures[key] += 1
+                if self.dead_letters is not None:
+                    for record in batch:
+                        self.dead_letters.publish(
+                            record, reason=f"delivery_failed:{backend.name}")
+            else:
+                self.delivered[key] += len(batch)
+
+    def lag(self) -> Dict[str, int]:
+        return {k: self.offered - b.terminal.counters.emitted
+                for k, b in zip(self._keys, self.backends)}
+
+    def backend_stats(self) -> Dict[str, dict]:
+        lag = self.lag()
+        return {k: {**b.stats(),
+                    "terminal_emitted": b.terminal.counters.emitted,
+                    "delivered": self.delivered[k],
+                    "failures": self.failures[k], "lag": lag[k]}
+                for k, b in zip(self._keys, self.backends)}
+
+    def tick(self, now: float) -> None:
+        for b in self.backends:
+            b.tick(now)
+
+    def flush(self) -> None:
+        super().flush()
+        for b in self.backends:
+            b.flush()
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        super().close()
+        for b in self.backends:
+            b.close()

@@ -25,6 +25,7 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig
 from repro.core.queues import BoundedPriorityQueue, Message
 from repro.core.dead_letters import DeadLettersListener
+from repro.delivery import Subscription, SubscriptionHub
 from repro.models.model import BaseModel
 
 
@@ -54,10 +55,19 @@ class ServeEngine:
         self.cfg = cfg
         self.eos_id = eos_id
         self.clock = clock
-        self.dead_letters = DeadLettersListener()
+        self.dead_letters = DeadLettersListener(
+            alert_hook=self._on_dead_letter_alert)
         # optional repro.alerts.AnalyticsStage: per-request latency metrics
-        # windowed on the request clock; fired alerts via fired_alerts()
+        # windowed on the request clock; alerts stream to subscribers via
+        # subscribe_alerts() (fired_alerts() remains as a poll-compat view)
         self.analytics = analytics
+        # one homogeneous push surface: rule alerts land here through the
+        # stage's AlertSink hub; dead-letter threshold alerts are emitted
+        # into the SAME hub by the hook above
+        stage_hub = getattr(getattr(analytics, "sink", None), "hub", None)
+        self.alert_hub: SubscriptionHub = (
+            stage_hub if stage_hub is not None
+            else SubscriptionHub(name="serve-alerts"))
         self.main_q = BoundedPriorityQueue(cfg.queue_capacity,
                                            dead_letters=self.dead_letters)
         self.prio_q = BoundedPriorityQueue(cfg.queue_capacity,
@@ -191,22 +201,42 @@ class ServeEngine:
             self.analytics.advance(now)
         return produced
 
-    def fired_alerts(self) -> List:
-        """Every alert this engine has raised, as ``repro.alerts.Alert``
-        records: analytics-stage rule alerts (when an AnalyticsStage is
-        mounted) + dead-letter threshold alerts (wrapped so consumers see
-        one homogeneous type)."""
+    # ---- alert delivery ------------------------------------------------------
+    def _wrap_dead_letter_alert(self, message: str):
         from repro.alerts import Alert
 
+        return Alert(
+            rule="dead_letters", key="serve", window_start=0.0,
+            window_end=0.0, metric="count",
+            value=float(self.dead_letters.alert_threshold),
+            message=message, severity="critical")
+
+    def _on_dead_letter_alert(self, reason: str, threshold: int) -> None:
+        # push into the shared hub so subscribers see dead-letter alerts
+        # interleaved with rule alerts, as one homogeneous Alert type
+        self.alert_hub.emit([self._wrap_dead_letter_alert(
+            f"dead-letter threshold reached: {reason} x {threshold}")])
+
+    def subscribe_alerts(self, callback=None, *, capacity: int = 256,
+                         key_fn=None) -> Subscription:
+        """Stream every alert this engine raises — analytics-rule alerts
+        AND dead-letter threshold alerts — with no polling: a callback
+        fires at emit time, or iterate the returned bounded-buffer
+        Subscription (per-rule backpressure; see repro.delivery)."""
+        return self.alert_hub.subscribe(callback, capacity=capacity,
+                                        key_fn=key_fn)
+
+    def fired_alerts(self) -> List:
+        """POLL-COMPAT view (prefer ``subscribe_alerts``): every alert
+        this engine has raised, as ``repro.alerts.Alert`` records:
+        analytics-stage rule alerts (when an AnalyticsStage is mounted)
+        + dead-letter threshold alerts (wrapped so consumers see one
+        homogeneous type)."""
         out: List = []
         if self.analytics is not None:
             out.extend(self.analytics.alerts)
         for msg in self.dead_letters.alerts:
-            out.append(Alert(
-                rule="dead_letters", key="serve", window_start=0.0,
-                window_end=0.0, metric="count",
-                value=float(self.dead_letters.alert_threshold),
-                message=msg, severity="critical"))
+            out.append(self._wrap_dead_letter_alert(msg))
         return out
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:

@@ -1,0 +1,443 @@
+"""repro.delivery behaviour: the Sink protocol (counters/health/close),
+batching (size + virtual-time flush), retry with backoff -> dead letters,
+fan-out isolation + lag, push subscriptions with per-rule backpressure,
+the migrated terminal sinks (IndexSink/JsonlSink/TokenSink + the index()
+compat shim), and the pipeline/serve acceptance scenarios."""
+import numpy as np
+import pytest
+
+from repro.alerts import AlertSink, AnalyticsStage, ThresholdRule, WindowSpec
+from repro.core import AlertMixPipeline, DeadLettersListener, PipelineConfig
+from repro.core.sinks import IndexSink, JsonlSink, TokenSink
+from repro.data.tokenizer import HashTokenizer
+from repro.delivery import (
+    BatchingSink,
+    CollectingSink,
+    FanOutSink,
+    RetryingSink,
+    Sink,
+    SinkClosedError,
+    SubscriptionHub,
+    as_sink,
+)
+
+
+class FlakySink(Sink):
+    """Fails the first ``fail_first`` emit attempts, then succeeds."""
+
+    def __init__(self, fail_first=0, name=None):
+        super().__init__(name)
+        self.fail_first = fail_first
+        self.attempts = 0
+        self.records = []
+
+    def _write(self, batch):
+        self.attempts += 1
+        if self.attempts <= self.fail_first:
+            raise IOError(f"backend down (attempt {self.attempts})")
+        self.records.extend(batch)
+
+
+class BrokenSink(Sink):
+    def _write(self, batch):
+        raise IOError("permanently down")
+
+
+# ---------------------------------------------------------------------------
+# Sink protocol
+# ---------------------------------------------------------------------------
+
+def test_sink_counters_and_batches():
+    s = CollectingSink()
+    s.emit([("a", 1), ("b", 2)])
+    s.emit([])                                   # empty batch is a no-op
+    s.emit([("c", 3)])
+    assert s.records == [("a", 1), ("b", 2), ("c", 3)]
+    assert s.counters.emitted == 3 and s.counters.batches == 2
+    assert s.healthy and s.health()["last_error"] is None
+
+
+def test_emit_after_close_raises():
+    s = CollectingSink()
+    s.close()
+    with pytest.raises(SinkClosedError):
+        s.emit([("a", 1)])
+    s.close()                                    # idempotent
+
+
+def test_health_degrades_and_recovers():
+    s = FlakySink(fail_first=3)
+    for _ in range(3):
+        with pytest.raises(IOError):
+            s.emit([("a", 1)])
+    assert not s.healthy and s.counters.errors == 3
+    assert "backend down" in s.health()["last_error"]
+    s.emit([("a", 1)])                           # success resets the streak
+    assert s.healthy and s.consecutive_failures == 0
+
+
+def test_context_manager_closes():
+    with CollectingSink() as s:
+        s.emit([("a", 1)])
+    assert s.closed
+
+
+def test_as_sink_adapts_legacy_index_objects():
+    class Legacy:
+        def __init__(self):
+            self.docs = {}
+
+        def index(self, doc_id, doc):
+            self.docs[doc_id] = doc
+
+    legacy = Legacy()
+    sink = as_sink(legacy)
+    sink.emit([("a", {"x": 1}), ("b", {"x": 2})])
+    assert legacy.docs == {"a": {"x": 1}, "b": {"x": 2}}
+    assert as_sink(sink) is sink                 # Sinks pass through
+    with pytest.raises(TypeError):
+        as_sink(object())
+
+
+# ---------------------------------------------------------------------------
+# BatchingSink
+# ---------------------------------------------------------------------------
+
+def test_batching_flushes_on_size():
+    inner = CollectingSink()
+    b = BatchingSink(inner, max_batch=4)
+    b.emit([("a", i) for i in range(3)])
+    assert inner.records == [] and b.pending == 3
+    b.emit([("a", 3), ("a", 4)])                 # crosses the bound
+    assert len(inner.records) == 4 and b.pending == 1
+    assert inner.counters.batches == 1           # one fixed-size write
+
+
+def test_batching_flushes_on_virtual_time():
+    inner = CollectingSink()
+    b = BatchingSink(inner, max_batch=100, max_delay_s=5.0)
+    b.tick(10.0)                                 # clock is at t=10
+    b.emit([("a", 1)])                           # buffered at t=10
+    b.tick(14.0)
+    assert inner.records == []                   # 4s buffered < 5s
+    b.tick(15.0)                                 # 5s elapsed: flush
+    assert len(inner.records) == 1 and b.pending == 0
+    # the delay clock starts at buffering time, not at the next tick
+    b.emit([("a", 2)])
+    b.tick(20.0)
+    assert len(inner.records) == 2               # waited exactly 5s, not 10
+
+
+def test_batching_flush_and_close_drain():
+    inner = CollectingSink()
+    b = BatchingSink(inner, max_batch=100)
+    b.emit([("a", 1), ("a", 2)])
+    b.flush()
+    assert len(inner.records) == 2
+    b.emit([("a", 3)])
+    b.close()
+    assert len(inner.records) == 3 and inner.closed
+
+
+def test_batching_keeps_records_when_inner_raises():
+    inner = FlakySink(fail_first=1)
+    b = BatchingSink(inner, max_batch=2)
+    with pytest.raises(IOError):
+        b.emit([("a", 1), ("a", 2)])
+    assert b.pending == 2                        # nothing lost
+    b.flush()                                    # inner recovered
+    assert inner.records == [("a", 1), ("a", 2)]
+
+
+# ---------------------------------------------------------------------------
+# RetryingSink: backoff schedule -> dead letters after N attempts
+# ---------------------------------------------------------------------------
+
+def test_retry_succeeds_after_transient_failures():
+    dl = DeadLettersListener()
+    inner = FlakySink(fail_first=2)
+    r = RetryingSink(inner, max_attempts=4, backoff_s=1.0,
+                     backoff_factor=2.0, dead_letters=dl)
+    r.emit([("a", 1)])                           # attempt 1 fails, parked
+    assert inner.records == [] and r.pending_batches == 1
+    r.tick(0.5)                                  # backoff (1s) not elapsed
+    assert r.pending_batches == 1 and r.counters.retried == 0
+    r.tick(1.0)                                  # attempt 2 fails -> backoff 2s
+    assert r.counters.retried == 1 and r.pending_batches == 1
+    r.tick(2.9)                                  # 1.0 + 2.0 = 3.0 not reached
+    assert r.counters.retried == 1
+    r.tick(3.0)                                  # attempt 3 succeeds
+    assert inner.records == [("a", 1)]
+    assert r.pending_batches == 0 and dl.total == 0
+    assert r.counters.retried == 2
+
+
+def test_retry_exhausts_to_dead_letters():
+    dl = DeadLettersListener()
+    inner = BrokenSink(name="es")
+    r = RetryingSink(inner, max_attempts=3, backoff_s=1.0, dead_letters=dl)
+    r.emit([("a", 1), ("b", 2)])                 # attempt 1
+    r.tick(10.0)                                 # attempt 2
+    assert dl.total == 0
+    r.tick(20.0)                                 # attempt 3 -> give up
+    assert r.pending_batches == 0
+    assert r.counters.dead_lettered == 2
+    assert dl.by_reason["delivery_failed:es"] == 2
+    # the records themselves land in the DLQ, reason-tagged
+    assert ("delivery_failed:es", ("a", 1)) in list(dl.recent)
+
+
+def test_retry_close_dead_letters_leftovers():
+    dl = DeadLettersListener()
+    r = RetryingSink(BrokenSink(), max_attempts=10, backoff_s=1e9,
+                     dead_letters=dl)
+    r.emit([("a", 1)])
+    r.close()
+    assert dl.total == 1 and r.counters.dead_lettered == 1
+
+
+def test_retry_emit_never_raises():
+    r = RetryingSink(BrokenSink(), max_attempts=2)
+    r.emit([("a", 1)])                           # absorbed, no exception
+    assert r.counters.errors == 0 and r.healthy
+
+
+# ---------------------------------------------------------------------------
+# FanOutSink: isolation + lag
+# ---------------------------------------------------------------------------
+
+def test_fanout_isolates_backend_failure():
+    dl = DeadLettersListener()
+    good1, bad, good2 = CollectingSink("a"), BrokenSink("bad"), CollectingSink("b")
+    f = FanOutSink([good1, bad, good2], dead_letters=dl)
+    for i in range(5):
+        f.emit([(f"d{i}", {"i": i})])
+    assert len(good1.records) == 5 and len(good2.records) == 5
+    assert f.failures["bad"] == 5
+    assert f.lag() == {"a": 0, "bad": 5, "b": 0}
+    assert dl.by_reason["delivery_failed:bad"] == 5
+    stats = f.backend_stats()
+    assert not stats["bad"]["healthy"] and stats["a"]["healthy"]
+    assert stats["b"]["delivered"] == 5 and stats["bad"]["delivered"] == 0
+
+
+def test_fanout_lag_and_health_visible_through_retry_envelope():
+    """The canonical stack FanOutSink([RetryingSink(backend)]) must not
+    mask a dead backend: RetryingSink.emit never raises, but lag is
+    measured at the TERMINAL sink and health reflects the backend."""
+    good = CollectingSink("good")
+    bad = BrokenSink("bad")
+    f = FanOutSink([RetryingSink(good, name="good"),
+                    RetryingSink(bad, max_attempts=2, name="bad")])
+    for i in range(4):
+        f.emit([(f"d{i}", i)])
+    assert f.lag() == {"good": 0, "bad": 4}      # not zero behind the wrap
+    stats = f.backend_stats()
+    assert stats["bad"]["terminal_emitted"] == 0
+    assert not stats["bad"]["healthy"] and stats["good"]["healthy"]
+    # the envelope itself reports its backend's health, not its own
+    assert not f.backends[1].healthy and f.backends[1].health()["last_error"]
+
+
+def test_fanout_duplicate_backend_names_stay_distinct():
+    f = FanOutSink([CollectingSink(), CollectingSink()])
+    f.emit([("a", 1)])
+    assert len(f.delivered) == 2 and all(n == 1 for n in f.delivered.values())
+
+
+def test_fanout_forwards_lifecycle():
+    inner = CollectingSink()
+    f = FanOutSink([BatchingSink(inner, max_batch=100)])
+    f.emit([("a", 1)])
+    assert inner.records == []
+    f.flush()
+    assert len(inner.records) == 1
+    f.close()
+    assert inner.closed
+
+
+# ---------------------------------------------------------------------------
+# SubscriptionHub: push + per-rule backpressure
+# ---------------------------------------------------------------------------
+
+class _Rec:
+    def __init__(self, rule, i):
+        self.rule, self.i = rule, i
+
+
+def test_hub_callback_and_iterator_subscribers():
+    hub = SubscriptionHub()
+    got = []
+    cb = hub.subscribe(callback=got.append)
+    it = hub.subscribe()
+    hub.emit([_Rec("r1", 0), _Rec("r1", 1)])
+    assert [r.i for r in got] == [0, 1]          # pushed at emit time
+    assert len(it) == 2
+    assert [r.i for r in it] == [0, 1]           # drained in order
+    assert len(it) == 0
+    cb.close()
+    hub.emit([_Rec("r1", 2)])
+    assert len(got) == 2                         # closed: no more pushes
+    assert hub.subscriber_count == 1
+
+
+def test_hub_slow_subscriber_bounded_buffer_backpressure():
+    """A slow subscriber's buffer is bounded per rule: the producer never
+    blocks, the oldest records of the noisy rule drop (counted), and the
+    quiet rule's records survive untouched."""
+    hub = SubscriptionHub()
+    sub = hub.subscribe(capacity=4)
+    hub.emit([_Rec("noisy", i) for i in range(100)])
+    hub.emit([_Rec("quiet", i) for i in range(3)])
+    assert len(sub) == 4 + 3                     # bounded, not 103
+    assert sub.dropped["noisy"] == 96 and sub.dropped_total() == 96
+    drained = sub.drain()
+    assert [r.i for r in drained if r.rule == "noisy"] == [96, 97, 98, 99]
+    assert [r.i for r in drained if r.rule == "quiet"] == [0, 1, 2]
+    # hub-side emit never failed
+    assert hub.counters.emitted == 103 and hub.healthy
+
+
+def test_hub_drops_do_not_corrupt_cross_key_order():
+    """After a noisy rule overflows its buffer, pop() still yields the
+    surviving records in true arrival order — the noisy rule's newest
+    record must not inherit the dropped record's front-of-queue slot."""
+    hub = SubscriptionHub()
+    sub = hub.subscribe(capacity=1)
+    a1, b1, a2 = _Rec("A", 1), _Rec("B", 1), _Rec("A", 2)
+    hub.emit([a1, b1, a2])                       # a2 evicts a1
+    assert sub.dropped["A"] == 1
+    assert [(r.rule, r.i) for r in sub] == [("B", 1), ("A", 2)]
+
+
+def test_hub_raising_callback_is_counted_not_propagated():
+    hub = SubscriptionHub()
+
+    def bad(rec):
+        raise RuntimeError("consumer bug")
+
+    sub = hub.subscribe(callback=bad)
+    hub.emit([_Rec("r", 0)])                     # must not raise
+    assert sub.errors == 1 and sub.delivered == 0
+    assert hub.healthy
+
+
+def test_alert_sink_is_delivery_backed():
+    sink = AlertSink()
+    stage = AnalyticsStage(
+        WindowSpec(size_s=60.0),
+        [ThresholdRule("vol", metric="count", op=">=", threshold=1.0)])
+    pushed = []
+    stage.subscribe(callback=pushed.append)
+    it = stage.subscribe(capacity=8)
+    stage.observe({"channel": "news", "published_at": 10.0})
+    fired = stage.advance(61.0)
+    assert len(fired) == 1
+    assert pushed == fired                       # push == poll content
+    assert list(it) == fired
+    snap = stage.snapshot()
+    assert snap["alerts"]["total"] == 1
+    assert snap["alerts"]["subscribers"] == 2
+
+
+# ---------------------------------------------------------------------------
+# terminal sinks: batch protocol + compat shim + satellites
+# ---------------------------------------------------------------------------
+
+def test_index_sink_emit_and_shim():
+    s = IndexSink()
+    s.emit([("d1", {"title": "Breaking Market News"}),
+            ("d2", {"title": "quiet day"})])
+    s.index("d3", {"title": "market rally"})     # one-release shim
+    assert len(s) == 3 and s.indexed == 3
+    assert {d["title"] for d in s.search("market")} == \
+        {"Breaking Market News", "market rally"}
+
+
+def test_jsonl_sink_context_manager_flush_and_len(tmp_path):
+    path = str(tmp_path / "out" / "docs.jsonl")
+    with JsonlSink(path) as s:
+        s.emit([("a", {"title": "t1"}), ("b", {"title": "t2"})])
+        s.index("c", {"title": "t3"})
+        assert len(s) == 3 and s.written == 3
+    assert s.closed
+    import json
+    lines = [json.loads(l) for l in open(path)]
+    assert [l["_id"] for l in lines] == ["a", "b", "c"]
+    with pytest.raises(SinkClosedError):
+        s.emit([("d", {})])
+
+
+def test_token_sink_packs_fixed_length_samples():
+    tok = HashTokenizer(512)
+    s = TokenSink(tok, seq_len=8)
+    docs = [(f"d{i}", {"title": "alpha beta", "body": "gamma delta epsilon"})
+            for i in range(6)]
+    s.emit(docs)
+    assert s.docs_consumed == 6
+    assert s.samples_emitted == len(s) > 0
+    sample = s.pop_samples(1)[0]
+    assert sample.shape == (8,) and sample.dtype == np.int32
+    assert (sample >= 0).all() and (sample < 512).all()
+    # state round-trip reproduces the buffer exactly
+    st = s.state()
+    s2 = TokenSink(tok, seq_len=8)
+    s2.load_state(st)
+    assert s2.samples_emitted == s.samples_emitted
+    assert s2.docs_consumed == s.docs_consumed
+    for a, b in zip(s.samples, s2.samples):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: pipeline 3-backend fan-out with an injected failure
+# ---------------------------------------------------------------------------
+
+def test_pipeline_three_backend_fanout_with_injected_failure():
+    """All documents flow through the Sink protocol end-to-end: two
+    healthy backends receive identical document sets while the injected
+    failure backend retries, then dead-letters every record."""
+    healthy1, healthy2 = IndexSink(), CollectingSink()
+    broken = BrokenSink(name="down_es")
+    cfg = PipelineConfig(num_sources=300, feed_interval_s=120.0,
+                         analytics=True, window_size_s=300.0,
+                         delivery_batch=8, delivery_max_delay_s=5.0,
+                         delivery_retry_attempts=2,
+                         delivery_retry_backoff_s=2.0)
+    p = AlertMixPipeline(cfg, seed=2, sinks=[healthy1, healthy2, broken])
+    m = p.run_for(1800.0)
+
+    assert m.indexed_total > 0
+    # identical sets delivered to every healthy backend
+    ids1 = set(healthy1._docs)
+    ids2 = {doc_id for doc_id, _ in healthy2.records}
+    assert ids1 == ids2 and len(ids1) == m.indexed_total
+    # the failing backend dead-lettered every record after its retries
+    d = m.delivery["backends"]
+    assert d["down_es"]["emitted"] == 0 and not d["down_es"]["healthy"]
+    assert d["down_es"]["dead_lettered"] == m.indexed_total
+    assert d["down_es"]["retried"] > 0
+    assert d["down_es"]["lag"] >= m.indexed_total
+    assert p.dead_letters.by_reason["delivery_failed:down_es"] \
+        == m.indexed_total
+    # healthy backends show no retry traffic and zero lag after flush
+    for k in ("IndexSink", "CollectingSink"):
+        assert d[k]["emitted"] == m.indexed_total
+        assert d[k]["dead_lettered"] == 0 and d[k]["lag"] == 0
+
+
+def test_pipeline_alert_subscription_streams_without_polling():
+    """A subscriber registered before the run receives every fired alert
+    as it fires — no fired_alerts()/alerts polling."""
+    pushed = []
+    cfg = PipelineConfig(num_sources=300, feed_interval_s=120.0,
+                         analytics=True, window_size_s=300.0,
+                         watermark_lag_s=0.0)
+    p = AlertMixPipeline(cfg, seed=3, analytics_rules=[
+        ThresholdRule("volume", metric="count", op=">=", threshold=3.0)])
+    p.analytics.subscribe(callback=pushed.append)
+    it = p.analytics.subscribe(capacity=10_000)
+    p.run_for(1800.0)
+    assert p.metrics.alerts_total > 0
+    assert pushed == p.alerts                    # push saw exactly the log
+    assert list(it) == p.alerts

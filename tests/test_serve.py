@@ -72,6 +72,53 @@ def test_queue_overflow_dead_letters(setup):
     assert eng.dead_letters.total == 2
 
 
+def test_subscriber_receives_every_alert_with_no_polling(setup):
+    """ServeEngine push surface: a subscriber registered up front gets
+    every rule alert AND dead-letter threshold alert as they fire —
+    fired_alerts() is only used at the end to prove parity."""
+    from repro.alerts import AnalyticsStage, ThresholdRule, WindowSpec
+
+    cfg, model, params, tok = setup
+    fake_now = [0.0]
+    stage = AnalyticsStage(
+        WindowSpec(size_s=1.0, allowed_lateness_s=0.0),
+        [ThresholdRule("slow_requests", metric="max", op=">=", threshold=0.0)],
+        key_fn=lambda d: "serve",
+        value_fn=lambda d: d["latency"],
+        time_fn=lambda d: d["published_at"])
+    eng = ServeEngine(model, params, ServeConfig(
+        max_batch=2, max_seq_len=96, replenish_after=1,
+        replenish_timeout_s=0.01), eos_id=-1,
+        clock=lambda: fake_now[0], analytics=stage)
+    pushed = []
+    sub = eng.subscribe_alerts(callback=pushed.append)
+    it = eng.subscribe_alerts(capacity=1024)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt_tokens=tok.encode("aa bb",
+                                                           add_eos=False),
+                           max_new_tokens=2, arrived_at=fake_now[0]))
+    for _ in range(40):
+        fake_now[0] += 0.3
+        eng.step()
+        if not any(eng.active) and not len(eng.main_q) + len(eng.prio_q):
+            break
+    fake_now[0] += 5.0
+    eng.step()
+    assert pushed and all(a.rule == "slow_requests" for a in pushed)
+    # dead-letter threshold alerts arrive through the SAME hub, pushed
+    for _ in range(eng.dead_letters.alert_threshold):
+        eng.dead_letters.publish("x", reason="mailbox_overflow")
+    assert any(a.rule == "dead_letters" for a in pushed)
+    # the push stream saw exactly what the poll view reports
+    polled = eng.fired_alerts()
+    assert len(pushed) == len(polled)
+    assert {(a.rule, a.message) for a in pushed} == \
+        {(a.rule, a.message) for a in polled}
+    # the bounded iterator subscription saw the same stream
+    assert [a.rule for a in it] == [a.rule for a in pushed]
+    sub.close()
+
+
 def test_engine_exposes_fired_alerts(setup):
     """ServeEngine + AnalyticsStage: per-request latency metrics windowed
     on the request clock; a latency-threshold rule surfaces through
