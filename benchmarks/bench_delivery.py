@@ -4,8 +4,8 @@ Sink stack the pipeline now emits through.
   fan-out width    docs/sec through BatchingSink -> FanOutSink as the
                    backend count grows 1 -> 8 (per-backend retry
                    envelopes included, IndexSink terminals)
-  flush-batch      docs/sec vs BatchingSink.max_batch (1 = the old
-                   sink.index() call pattern, larger = amortized)
+  flush-batch      docs/sec vs BatchingSink.max_batch (1 = the retired
+                   one-document-per-call pattern, larger = amortized)
   push latency     alert emit -> subscriber-callback latency p50/p99
                    (wall clock), plus e2e pipeline fan-out with an
                    injected-failure backend proving isolation numbers

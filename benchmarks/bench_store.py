@@ -1,0 +1,188 @@
+"""Durability-plane benchmark (repro.store): quantifies the event log,
+the journal, and the replay path the pipeline now rides.
+
+  append MB/s        EventLog.append throughput (doc-shaped payloads,
+                     batch writes, size-based segment roll included)
+  scan MB/s          checksummed sequential read of the whole log
+  replay vs live     events/sec through ReplayEngine.replay_events
+                     (pack_events -> Pallas window_reduce -> RuleEngine)
+                     vs the same events through the incremental
+                     WindowOperator live path
+  recovery-to-drain  virtual + wall time from a failed backend's health
+                     flipping back up to its journal backlog fully
+                     re-delivered (pipeline auto-replay)
+
+Writes machine-readable results to ``BENCH_store.json`` (CI uploads it
+as an artifact so trajectories accumulate across commits).
+
+  PYTHONPATH=src python -m benchmarks.bench_store            # full
+  PYTHONPATH=src python -m benchmarks.bench_store --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.alerts import AnalyticsStage, ThresholdRule, WindowOperator, WindowSpec
+from repro.core import AlertMixPipeline, PipelineConfig
+from repro.core.sinks import IndexSink
+from repro.delivery import Sink
+from repro.store import EventLog, ReplayEngine
+
+
+def _docs(n: int):
+    return [{"id": f"d{i}",
+             "doc": {"title": f"doc {i} market news", "body": "x " * 16,
+                     "published_at": float(i % 900), "channel": "news"}}
+            for i in range(n)]
+
+
+def bench_append_scan(n_docs: int, segment_bytes: int = 4 << 20) -> dict:
+    d = tempfile.mkdtemp(prefix="bench_store_")
+    try:
+        log = EventLog(os.path.join(d, "log"), segment_bytes=segment_bytes)
+        docs = _docs(n_docs)
+        t0 = time.perf_counter()
+        for i in range(0, n_docs, 64):           # worker-sized batches
+            log.append(docs[i:i + 64])
+        append_dt = time.perf_counter() - t0
+        mb = log.stats.appended_bytes / 1e6
+        t0 = time.perf_counter()
+        count = sum(1 for _ in log.scan(0))
+        scan_dt = time.perf_counter() - t0
+        assert count == n_docs
+        log.close()
+        return {"append_mb_s": mb / append_dt, "scan_mb_s": mb / scan_dt,
+                "append_docs_s": n_docs / append_dt,
+                "scan_docs_s": n_docs / scan_dt,
+                "mb": mb, "segments": log.segments}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def bench_replay_vs_live(n_events: int) -> dict:
+    rng = np.random.default_rng(0)
+    events = [(k, float(rng.uniform(0, 3600)), float(rng.uniform(0, 5)))
+              for k in ("news", "twitter", "facebook")
+              for _ in range(n_events // 3)]
+    spec = WindowSpec(kind="tumbling", size_s=60.0)
+
+    # live path: incremental operator + rules
+    stage_live = AnalyticsStage(spec, [ThresholdRule(
+        "vol", metric="count", op=">=", threshold=1.0)])
+    t0 = time.perf_counter()
+    for k, t, v in events:
+        stage_live.operator.observe(k, t, v)
+    stage_live.advance(1e9)
+    live_dt = time.perf_counter() - t0
+
+    # batch path: one kernel launch through the replay engine
+    stage_replay = AnalyticsStage(spec, [ThresholdRule(
+        "vol", metric="count", op=">=", threshold=1.0)])
+    eng = ReplayEngine(analytics=stage_replay)
+    t0 = time.perf_counter()
+    aggs, fired = eng.replay_events(events, watermark=1e9)
+    replay_dt = time.perf_counter() - t0
+    assert len(fired) == len(stage_live.alerts)   # parity on fired alerts
+    return {"live_events_s": len(events) / live_dt,
+            "replay_events_s": len(events) / replay_dt,
+            "speedup": live_dt / replay_dt,
+            "events": len(events), "aggregates": len(aggs)}
+
+
+class _OutageSink(Sink):
+    def __init__(self, name=None):
+        super().__init__(name)
+        self.down = False
+        self.records = []
+
+    def _write(self, batch):
+        if self.down:
+            raise IOError("injected outage")
+        self.records.extend(batch)
+
+
+def bench_recovery_drain(num_sources: int, virtual_s: float) -> dict:
+    """Outage -> journal fills -> recovery -> auto-replay drains; reports
+    backlog size and recovery-to-drain latency (virtual + wall)."""
+    d = tempfile.mkdtemp(prefix="bench_store_e2e_")
+    try:
+        flaky = _OutageSink(name="flaky_es")
+        p = AlertMixPipeline(
+            PipelineConfig(num_sources=num_sources, feed_interval_s=120.0,
+                           store_dir=d, delivery_batch=8,
+                           delivery_retry_attempts=2,
+                           delivery_retry_backoff_s=2.0),
+            seed=0, sinks=[IndexSink(), flaky])
+        p.run_for(virtual_s / 3, dt=5.0)
+        flaky.down = True
+        p.run_for(virtual_s / 3, dt=5.0)
+        backlog = p.store.journal.pending().get("delivery_failed:flaky_es", 0)
+        flaky.down = False
+        t0_wall = time.perf_counter()
+        t0_virtual = p.now
+        drained_at = None
+        while p.now - t0_virtual < virtual_s:
+            p.step(5.0)
+            if p.metrics.replayed_total >= backlog:
+                drained_at = p.now
+                break
+        wall = time.perf_counter() - t0_wall
+        p.close()
+        return {"backlog": backlog,
+                "replayed": p.metrics.replayed_total,
+                "recovery_to_drain_virtual_s":
+                    (drained_at - t0_virtual) if drained_at else float("inf"),
+                "recovery_to_drain_wall_s": wall,
+                "store": {k: v for k, v in p.metrics.store.items()
+                          if k != "replay"}}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def main(rows, *, smoke: bool = False):
+    n = 5_000 if smoke else 100_000
+    apsc = bench_append_scan(n)
+    rows.append((
+        "store_append_scan",
+        1e6 / apsc["append_docs_s"],             # us per appended doc
+        f"append={apsc['append_mb_s']:.1f}MB/s "
+        f"scan={apsc['scan_mb_s']:.1f}MB/s segments={apsc['segments']}",
+    ))
+    rvl = bench_replay_vs_live(3_000 if smoke else 60_000)
+    rows.append((
+        "store_replay_vs_live",
+        1e6 / rvl["replay_events_s"],            # us per replayed event
+        f"replay={rvl['replay_events_s']:,.0f}ev/s "
+        f"live={rvl['live_events_s']:,.0f}ev/s "
+        f"speedup=x{rvl['speedup']:.2f}",
+    ))
+    e2e = bench_recovery_drain(200 if smoke else 2_000,
+                               600.0 if smoke else 3600.0)
+    rows.append((
+        "store_recovery_drain",
+        1e6 * e2e["recovery_to_drain_wall_s"] / max(e2e["backlog"], 1),
+        f"backlog={e2e['backlog']} replayed={e2e['replayed']} "
+        f"virtual_s={e2e['recovery_to_drain_virtual_s']:.0f} "
+        f"wall_s={e2e['recovery_to_drain_wall_s']:.2f}",
+    ))
+    # hard floors: a drained backlog and a log that round-trips
+    assert e2e["backlog"] > 0 and e2e["replayed"] >= e2e["backlog"]
+    assert apsc["append_mb_s"] > 0 and apsc["scan_mb_s"] > 0
+    with open("BENCH_store.json", "w", encoding="utf-8") as fh:
+        json.dump({"append_scan": apsc, "replay_vs_live": rvl,
+                   "recovery_drain": e2e, "smoke": smoke}, fh, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    out: list = []
+    main(out, smoke="--smoke" in sys.argv or "--tiny" in sys.argv)
+    for name, us, derived in out:
+        print(f"{name},{us:.0f},{derived}")

@@ -6,6 +6,9 @@
                     latency (p50/p99) + window_reduce kernel throughput
   bench_delivery  — delivery layer: docs/sec vs fan-out width, flush-
                     batch sweep, alert push latency p50/p99
+  bench_store     — durability plane: event-log append/scan MB/s, batch
+                    replay vs live-path events/sec, recovery-to-drain
+                    latency (writes BENCH_store.json)
   bench_scaling   — source-count scaling + resizer ablation
   bench_serving   — continuous vs static batching (FeedRouter admission)
   bench_train     — CPU train-step throughput per model family
@@ -28,13 +31,14 @@ def main() -> None:
         bench_roofline,
         bench_scaling,
         bench_serving,
+        bench_store,
         bench_train,
     )
 
     rows: list = []
     failures = 0
-    for mod in (bench_alertmix, bench_alerts, bench_delivery, bench_scaling,
-                bench_serving, bench_train, bench_roofline):
+    for mod in (bench_alertmix, bench_alerts, bench_delivery, bench_store,
+                bench_scaling, bench_serving, bench_train, bench_roofline):
         try:
             mod.main(rows)
         except Exception:

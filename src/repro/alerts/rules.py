@@ -159,15 +159,33 @@ class ThresholdRule(AlertRule):
 class RateOfChangeRule(AlertRule):
     """Fires when metric grows by >= ``factor`` x vs the previous closed
     window for the same key (both windows must clear ``min_value`` to
-    suppress 0 -> 1 noise)."""
+    suppress 0 -> 1 noise).
+
+    Order guard: "previous window" is only meaningful for windows
+    arriving in time order.  The live operator guarantees that; batch
+    REPLAY of an old backlog (repro.store) does not — an out-of-order
+    window (end <= the key's newest seen end) is ignored rather than
+    allowed to clobber ``_prev`` and corrupt the next live comparison.
+    """
 
     def __init__(self, name: str, metric: str = "count", factor: float = 2.0,
                  min_value: float = 1.0, severity: str = "warning"):
         self.name, self.metric = name, metric
         self.factor, self.min_value, self.severity = factor, min_value, severity
         self._prev: Dict[str, float] = {}
+        self._last_end: Dict[str, float] = {}
 
     def evaluate(self, agg: WindowAggregate) -> Optional[Alert]:
+        if agg.window_end > agg.closed_at_watermark:
+            # force-closed AHEAD of the watermark (a replayed backlog
+            # stamped past live time): not part of the key's live
+            # timeline — letting it ratchet _last_end forward would
+            # silence the rule for every later live window
+            return None
+        last_end = self._last_end.get(agg.key)
+        if last_end is not None and agg.window_end <= last_end:
+            return None                  # replayed backfill: no state touch
+        self._last_end[agg.key] = agg.window_end
         v = _metric(agg, self.metric)
         prev = self._prev.get(agg.key)
         self._prev[agg.key] = v
@@ -184,7 +202,10 @@ class RateOfChangeRule(AlertRule):
 class ZScoreRule(AlertRule):
     """Per-key anomaly detection: Welford running mean/variance of the
     metric over past windows; fires when |z| >= ``z``.  The current window
-    is folded into history *after* scoring so a spike can't mask itself."""
+    is folded into history *after* scoring so a spike can't mask itself.
+    (Welford folding is order-insensitive, so batch-replayed backfill
+    windows join history safely; each window is scored against whatever
+    history exists when it arrives.)"""
 
     def __init__(self, name: str, metric: str = "count", z: float = 3.0,
                  min_history: int = 5, severity: str = "critical"):

@@ -21,11 +21,46 @@ Delivery (repro.delivery) — every producer's single egress:
   BatchingSink -> FanOutSink -> per-backend RetryingSink stack; the
   terminal sinks (repro.core.sinks: IndexSink / JsonlSink / TokenSink)
   implement the Sink protocol (emit(batch)/flush()/close() + health +
-  counters; index() remains as a one-release shim).  Failed backends
-  retry with exponential backoff and dead-letter after N attempts;
+  counters; the old index() surface is retired — a DeprecationWarning
+  stub survives one more release).  Failed backends retry with
+  exponential backoff and dead-letter after N attempts;
   Metrics.delivery surfaces emitted/retried/dead_lettered/lag per
   backend.  Alerts flow through the same layer (AlertSink fans out to a
-  log + a SubscriptionHub) so consumers subscribe instead of polling.
+  log + a SubscriptionHub) so consumers subscribe — push callbacks,
+  bounded iterators, or the long-poll wait(timeout) — instead of
+  polling.
+
+Durability plane (repro.store) — nothing absorbed is ever lost:
+
+  PipelineConfig(store_dir=...) mounts a StorePlane:
+
+    worker doc batch --tee--> EventLog      append-only segmented
+                                            checksummed jsonl log;
+                                            manifest + atomic seals;
+                                            torn tails truncated at
+                                            reopen (crash-tolerant)
+    DeadLetters.publish --> DeadLetterJournal  every dead letter is
+                                            persisted with its reason
+                                            taxonomy + durable
+                                            per-reason replay cursors
+    backend health flip --> ReplayEngine    delivery_failed:<backend>
+                                            backlogs re-emitted through
+                                            that backend's OWN retry
+                                            envelope, dedup-idempotent
+                                            (repro.core.dedup);
+                                            late_event / raw log ranges
+                                            re-aggregated through the
+                                            Pallas batch path
+                                            (alerts.batch ->
+                                            window_reduce) into the
+                                            SAME RuleEngine state the
+                                            live WindowOperator feeds —
+                                            batch and live are one path
+                                            with two drive modes
+
+  Metrics.store reports appended/replayed/pending records, bytes and
+  segments; AlertMixPipeline.replay_status() / ServeEngine
+  .replay_status() expose replay-engine + journal state.
 
 Two integrations make it load-bearing for the training framework:
   repro.data.stream_pipeline  — multi-source training-data ingestion with

@@ -26,6 +26,13 @@ class DedupWindow:
         self.hits = 0
         self.misses = 0
 
+    def contains(self, h: str) -> bool:
+        """Membership peek WITHOUT registering (seen_before registers);
+        the replay engine peeks first and registers only once delivery
+        is verified."""
+        with self._lock:
+            return h in self._seen
+
     def seen_before(self, h: str) -> bool:
         """Returns True if duplicate; registers the hash otherwise."""
         with self._lock:

@@ -12,6 +12,12 @@
     -> DeadLettersListener monitors every bounded mailbox AND delivery
        failures (reason="delivery_failed:<backend>")
 
+Durability plane (``PipelineConfig.store_dir``; repro.store): accepted
+documents are teed into an append-only checksummed EventLog, every dead
+letter is journaled with its reason, and when a failed backend's health
+flips back up the ReplayEngine re-delivers its ``delivery_failed:*``
+backlog through the backend's own retry envelope (dedup-idempotent).
+
 Runs against a VIRTUAL clock (``run_for``) so the paper's 24h/200k-source
 experiment replays in seconds, or incrementally via ``step``.
 """
@@ -64,6 +70,21 @@ class PipelineConfig:
     delivery_max_delay_s: float = 5.0  # virtual-time bound on buffering
     delivery_retry_attempts: int = 3   # per-backend attempts before DLQ
     delivery_retry_backoff_s: float = 2.0  # first backoff (then x2 each)
+    # ---- durability plane (repro.store) ------------------------------------
+    store_dir: Optional[str] = None    # mount the durable log/journal plane
+    segment_bytes: int = 1 << 20       # event-log segment roll size
+    segment_age_s: Optional[float] = None  # optional age roll (virtual time)
+    store_fsync: bool = False          # fsync every append (durable, slower)
+    replay_auto: bool = True           # auto-replay delivery_failed:* when a
+                                       # backend's health flips back up
+    replay_batch: int = 256            # records per replay emit
+    replay_dedup_window: int = 1 << 16  # replay idempotency window
+    replay_late_on_flush: bool = True  # drain the late_event journal
+                                       # through the batch path at every
+                                       # flush_delivery (also unpins the
+                                       # journal's truncation floor, so
+                                       # disk is reclaimed; off = late
+                                       # backlog kept for manual replay)
 
 
 @dataclass
@@ -81,10 +102,14 @@ class Metrics:
     malformed_total: int = 0
     alerts_total: int = 0
     windows_closed_total: int = 0
+    replayed_total: int = 0            # records re-delivered from the journal
     # delivery-layer counters, refreshed at flush_delivery (run_for does
     # this at its cutoff): top-level emitted/pending plus
     # {backend: emitted/retried/dead_lettered/lag/healthy}
     delivery: dict = field(default_factory=dict)
+    # durability-plane counters (repro.store), refreshed with delivery:
+    # appended/replayed/pending records + bytes + segments
+    store: dict = field(default_factory=dict)
 
 
 class AlertMixPipeline:
@@ -94,7 +119,17 @@ class AlertMixPipeline:
                  analytics_rules: Optional[list] = None):
         self.cfg = cfg
         self.now = 0.0
-        self.dead_letters = DeadLettersListener()
+        # ---- durability plane (repro.store): mounted before anything that
+        # can dead-letter, so every published record is journaled from t=0
+        self.store = None
+        if cfg.store_dir:
+            from repro.store import StorePlane
+            self.store = StorePlane(
+                cfg.store_dir, segment_bytes=cfg.segment_bytes,
+                segment_age_s=cfg.segment_age_s, fsync=cfg.store_fsync,
+                replay_dedup_window=cfg.replay_dedup_window)
+        self.dead_letters = DeadLettersListener(
+            journal=None if self.store is None else self.store.journal)
         self.registry = StreamRegistry(lease_s=cfg.feed_interval_s * 2)
         self.sim = SourceSimulator(seed=seed)
         self.item_hook = item_hook
@@ -163,6 +198,14 @@ class AlertMixPipeline:
                 rules,
                 watermark_lag_s=cfg.watermark_lag_s,
                 dead_letters=self.dead_letters)
+        if self.store is not None:
+            # the replay engine aggregates through the SAME rule-engine
+            # state the live WindowOperator feeds (batch/live unification)
+            self.store.replay.analytics = self.analytics
+        # per-backend health, tracked across steps so a False -> True flip
+        # (backend recovery) can trigger an automatic journal replay
+        self._backend_health: Dict[str, bool] = {
+            b.terminal.name: b.healthy for b in self.fan_out.backends}
 
         # populate the registry (incremental add — sources spread over the
         # first interval so picks don't all collide at t=0)
@@ -212,6 +255,8 @@ class AlertMixPipeline:
                 self.analytics.observe(doc, now=self.now)
             accepted += 1
         if out_batch:
+            if self.store is not None:       # tee into the durable log
+                self.store.append_documents(out_batch)
             self.delivery.emit(out_batch)
         self.metrics.indexed_total += accepted
         self.registry.mark_processed(
@@ -236,6 +281,10 @@ class AlertMixPipeline:
         # Metrics.delivery refresh at flush_delivery / run_for cutoff,
         # not per step — call delivery_stats() for a live view)
         self.delivery.tick(self.now)
+        if self.store is not None:
+            self.store.tick(self.now)
+            if self.cfg.replay_auto:
+                self._maybe_replay()
         if picked:
             self.metrics.sent.append((self.now, picked))
         if done:
@@ -259,12 +308,59 @@ class AlertMixPipeline:
         self.flush_delivery()
         return self.metrics
 
+    # ---- durability plane (repro.store) -------------------------------------
+    def _maybe_replay(self) -> None:
+        """Auto-replay: when a backend's per-sink health flips back to
+        healthy, drain its ``delivery_failed:<backend>`` journal backlog
+        through that backend's OWN retry envelope (part of the existing
+        Batching -> FanOut -> Retrying stack), dedup-idempotently."""
+        for b in self.fan_out.backends:
+            name = b.terminal.name
+            healthy = b.healthy
+            was = self._backend_health.get(name, True)
+            self._backend_health[name] = healthy
+            if healthy and not was:
+                res = self.store.replay.replay_dead_letters(
+                    f"delivery_failed:{name}", b,
+                    batch=self.cfg.replay_batch)
+                self.metrics.replayed_total += res["replayed"]
+
+    def replay_status(self) -> dict:
+        """Replay-engine + journal status (``{"enabled": False}`` when no
+        store plane is mounted)."""
+        if self.store is None:
+            return {"enabled": False}
+        return {"enabled": True, **self.store.replay.status()}
+
+    def store_stats(self) -> dict:
+        """Live durability-plane counters (appended/replayed/pending
+        records, bytes, segments); ``Metrics.store`` holds the snapshot
+        taken at the last ``flush_delivery``."""
+        return {} if self.store is None else self.store.status()
+
+    def close(self) -> None:
+        """Flush delivery and close the durability plane (fsyncs the
+        active log segments so a reopen sees every appended record)."""
+        self.flush_delivery()
+        if self.store is not None:
+            self.store.close()
+
     def flush_delivery(self) -> None:
         """Force buffered/parked records out to every backend and refresh
         the delivery counters (run_for does this at its cutoff so sinks
-        are complete up to ``now``)."""
+        are complete up to ``now``).  With a store plane + analytics
+        mounted, the journal's ``late_event`` backlog is drained through
+        the batch path here too — late data joins the same rule state
+        instead of rotting on disk (sessions excluded: no static slot
+        layout for the kernel path)."""
+        if (self.store is not None and self.analytics is not None
+                and self.cfg.replay_late_on_flush
+                and self.analytics.operator.spec.kind != "session"):
+            res = self.store.replay.replay_late_events(watermark=self.now)
+            self.metrics.alerts_total += res["alerts"]
         self.delivery.flush()
         self.metrics.delivery = self.delivery_stats()
+        self.metrics.store = self.store_stats()
 
     def delivery_stats(self) -> dict:
         """Per-backend delivery counters: emitted (records the terminal

@@ -5,9 +5,11 @@ stand-in; ``JsonlSink`` persists to disk (context manager, flush on
 close); ``TokenSink`` feeds the training data pipeline (tokenize + pack
 into fixed-length samples).
 
-``index(doc_id, doc)`` remains as a one-release compat shim — it
-forwards to ``emit`` — so pre-delivery callers keep working; new code
-should emit batches (directly or through the pipeline's FanOutSink).
+The pre-delivery ``index(doc_id, doc)`` surface is RETIRED: every
+in-tree caller emits batches now.  The method survives one more release
+as a loud ``DeprecationWarning`` stub (out-of-tree callers against the
+old document-sink API are plausible); it will be deleted next release —
+use ``emit([(doc_id, doc)])``.
 """
 from __future__ import annotations
 
@@ -15,6 +17,7 @@ import collections
 import json
 import os
 import threading
+import warnings
 from typing import Deque, Dict, List, Optional
 
 import numpy as np
@@ -26,7 +29,13 @@ class DocumentSink(Sink):
     """Base for document sinks: records are ``(doc_id, doc)`` pairs."""
 
     def index(self, doc_id: str, doc: dict) -> None:
-        """Deprecated single-document shim; use ``emit([(id, doc)])``."""
+        """DEPRECATED stub (removal next release): the single-document
+        surface predates the delivery layer.  Use ``emit([(id, doc)])``
+        — or route through the pipeline's delivery stack."""
+        warnings.warn(
+            f"{type(self).__name__}.index(doc_id, doc) is deprecated and "
+            "will be removed next release; use emit([(doc_id, doc)])",
+            DeprecationWarning, stacklevel=2)
         self.emit([(doc_id, doc)])
 
 

@@ -13,11 +13,17 @@ subscriber immediately; consumers stop polling.  Two consumption modes:
              tail instead of stalling the producer, and one noisy rule
              cannot evict another rule's records (per-rule isolation —
              the default key is the record's ``rule`` attribute).
+
+Long-poll: ``Subscription.wait(timeout)`` blocks (condition variable,
+no spinning) until the next record or the timeout; ``hub.wait(timeout)``
+is the one-shot form — the blocking-GET primitive a remote serving
+client needs to wait on the next alert.
 """
 from __future__ import annotations
 
 import collections
 import threading
+import time
 from typing import Callable, Dict, List, Optional
 
 from repro.delivery.base import Sink
@@ -47,7 +53,9 @@ class Subscription:
         self.closed = False
         self._buffers: Dict[str, collections.deque] = {}
         self._order: collections.deque = collections.deque()  # arrival keys
-        self._lock = threading.Lock()
+        # a Condition so wait() can block for the next push; `with` takes
+        # the underlying lock, keeping every existing critical section
+        self._lock = threading.Condition()
 
     # ---- producer side (hub only) -----------------------------------------
     def _push(self, record) -> None:
@@ -79,6 +87,7 @@ class Subscription:
             buf.append(record)
             self._order.append(key)
             self.delivered += 1
+            self._lock.notify_all()      # wake long-poll waiters
 
     # ---- consumer side -----------------------------------------------------
     def pop(self):
@@ -90,6 +99,30 @@ class Subscription:
                 if buf:
                     return buf.popleft()
             return None
+
+    def wait(self, timeout: Optional[float] = None):
+        """Long-poll: return the next record in arrival order, blocking
+        up to ``timeout`` seconds (wall clock; None = forever) for one
+        to arrive.  Returns None on timeout or if the subscription is
+        closed while waiting.  No spinning — a condition variable parks
+        the caller until the producer's next push."""
+        if self.callback is not None:
+            raise RuntimeError(
+                "wait() requires an iterator-mode subscription "
+                "(subscribe() without a callback)")
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:                 # Condition wraps an RLock, so
+            while True:                  # pop() re-enters it safely
+                rec = self.pop()
+                if rec is not None:
+                    return rec
+                if self.closed:
+                    return None
+                remaining = None if deadline is None \
+                    else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return None
+                self._lock.wait(remaining)
 
     def drain(self, max_items: Optional[int] = None) -> List:
         out: List = []
@@ -115,7 +148,9 @@ class Subscription:
         return sum(self.dropped.values())
 
     def close(self) -> None:
-        self.closed = True
+        with self._lock:
+            self.closed = True
+            self._lock.notify_all()      # release long-poll waiters
         self.hub.unsubscribe(self)
 
     def __enter__(self):
@@ -151,6 +186,16 @@ class SubscriptionHub(Sink):
     def subscriber_count(self) -> int:
         with self._subs_lock:
             return len(self._subs)
+
+    def wait(self, timeout: Optional[float] = None):
+        """One-shot long-poll: block until the NEXT record emitted into
+        the hub (or ``timeout`` seconds; None = forever) and return it,
+        or None on timeout.  An ephemeral iterator-mode subscription is
+        registered for the duration and always removed — the blocking
+        primitive a remote serving client uses to wait on the next alert
+        without spinning."""
+        with self.subscribe(capacity=1) as sub:
+            return sub.wait(timeout)
 
     def _write(self, batch: List) -> None:
         with self._subs_lock:

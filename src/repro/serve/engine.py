@@ -49,18 +49,24 @@ def _bucket(n: int, mult: int = 16) -> int:
 class ServeEngine:
     def __init__(self, model: BaseModel, params, cfg: ServeConfig,
                  *, eos_id: int = 2, clock: Callable[[], float] = time.monotonic,
-                 analytics=None):
+                 analytics=None, store=None):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.eos_id = eos_id
         self.clock = clock
+        # optional repro.store.StorePlane: journals this engine's dead
+        # letters durably and exposes replay_status()
+        self.store = store
         self.dead_letters = DeadLettersListener(
-            alert_hook=self._on_dead_letter_alert)
+            alert_hook=self._on_dead_letter_alert,
+            journal=None if store is None else store.journal)
         # optional repro.alerts.AnalyticsStage: per-request latency metrics
         # windowed on the request clock; alerts stream to subscribers via
         # subscribe_alerts() (fired_alerts() remains as a poll-compat view)
         self.analytics = analytics
+        if store is not None and store.replay.analytics is None:
+            store.replay.analytics = analytics    # batch/live unification
         # one homogeneous push surface: rule alerts land here through the
         # stage's AlertSink hub; dead-letter threshold alerts are emitted
         # into the SAME hub by the hook above
@@ -238,6 +244,15 @@ class ServeEngine:
         for msg in self.dead_letters.alerts:
             out.append(self._wrap_dead_letter_alert(msg))
         return out
+
+    def replay_status(self) -> dict:
+        """Status of the durability/replay plane (repro.store) mounted on
+        this engine — replay-engine stats, journal reasons/cursors, and
+        pending-per-reason counts — or ``{"enabled": False}`` when the
+        engine runs without a store."""
+        if self.store is None:
+            return {"enabled": False}
+        return {"enabled": True, **self.store.replay.status()}
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):

@@ -270,17 +270,28 @@ def test_sliding_spec_rejects_gapped_slide():
     ("tumbling", {}),
     ("sliding", {"slide_s": 30.0}),
 ])
-def test_batch_replay_matches_incremental_operator(kind, kw):
+def test_batch_replay_matches_incremental_operator(tmp_path, kind, kw):
     """alerts.batch (Pallas window_reduce replay) == WindowOperator (live
-    incremental) on the same event stream."""
+    incremental) on the same event stream — with the batch side reading
+    its events back from the durable on-disk EventLog (repro.store), the
+    way a real backfill would."""
     from repro.alerts.batch import reduce_events
+    from repro.store import EventLog
 
     rng = np.random.default_rng(5)
     events = [(k, float(rng.uniform(0, 900)), float(rng.uniform(0, 5)))
               for k in ("news", "twitter") for _ in range(300)]
     spec = WindowSpec(kind=kind, size_s=60.0, **kw)
 
-    batch = reduce_events(events, spec, interpret=True)
+    # durable roundtrip: persist -> close -> reopen -> scan back
+    with EventLog(str(tmp_path / "log"), segment_bytes=4096) as log:
+        log.append([{"key": k, "t": t, "v": v} for k, t, v in events])
+    replayed = [(p["key"], p["t"], p["v"])
+                for _, p in EventLog(str(tmp_path / "log"),
+                                     segment_bytes=4096).scan(0)]
+    assert replayed == events                    # checksummed, lossless
+
+    batch = reduce_events(replayed, spec, interpret=True)
     op = WindowOperator(spec)
     for k, t, v in events:
         op.observe(k, t, v)

@@ -348,7 +348,10 @@ def test_index_sink_emit_and_shim():
     s = IndexSink()
     s.emit([("d1", {"title": "Breaking Market News"}),
             ("d2", {"title": "quiet day"})])
-    s.index("d3", {"title": "market rally"})     # one-release shim
+    # the retired index() surface still forwards for one release, but
+    # LOUDLY: out-of-tree callers get a DeprecationWarning every call
+    with pytest.warns(DeprecationWarning, match=r"emit\(\[\(doc_id, doc\)\]\)"):
+        s.index("d3", {"title": "market rally"})
     assert len(s) == 3 and s.indexed == 3
     assert {d["title"] for d in s.search("market")} == \
         {"Breaking Market News", "market rally"}
@@ -358,7 +361,7 @@ def test_jsonl_sink_context_manager_flush_and_len(tmp_path):
     path = str(tmp_path / "out" / "docs.jsonl")
     with JsonlSink(path) as s:
         s.emit([("a", {"title": "t1"}), ("b", {"title": "t2"})])
-        s.index("c", {"title": "t3"})
+        s.emit([("c", {"title": "t3"})])
         assert len(s) == 3 and s.written == 3
     assert s.closed
     import json

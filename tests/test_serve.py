@@ -158,3 +158,30 @@ def test_engine_exposes_fired_alerts(setup):
     mixed = eng.fired_alerts()
     assert any(a.rule == "dead_letters" for a in mixed)
     assert all(hasattr(a, "rule") and hasattr(a, "severity") for a in mixed)
+
+
+def test_replay_status_and_store_mounted_journal(setup, tmp_path):
+    from repro.store import StorePlane
+
+    cfg, model, params, tok = setup
+    # without a store plane the surface reports disabled, nothing more
+    bare = _engine(model, params)
+    assert bare.replay_status() == {"enabled": False}
+
+    # with a store plane, the engine's dead letters are journaled
+    # durably and replay_status() exposes journal + replay state
+    store = StorePlane(str(tmp_path / "serve_store"))
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_batch=4, max_seq_len=96,
+                                  replenish_after=2,
+                                  replenish_timeout_s=0.01,
+                                  queue_capacity=2),
+                      eos_id=-1, store=store)
+    for i in range(4):                            # 2 overflow -> dead letters
+        eng.submit(Request(rid=i, prompt_tokens=[1, 2], max_new_tokens=1))
+    assert eng.dead_letters.total == 2
+    st = eng.replay_status()
+    assert st["enabled"]
+    assert st["journal"]["reasons"] == {"mailbox_overflow": 2}
+    assert st["pending"] == {"mailbox_overflow": 2}
+    store.close()
