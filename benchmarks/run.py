@@ -2,6 +2,10 @@
 """Benchmark harness.
 
   bench_alertmix  — Fig. 4: 200k-feed ingestion, drain vs ingest, peak rate
+  bench_ingest    — ingestion plane: sharded-registry pick/mark
+                    throughput (1/8/64 shards, 10k/200k sources),
+                    scheduler tick p50/p99, connector fan-in rates
+                    (writes BENCH_ingest.json)
   bench_alerts    — windowed analytics: events/sec + watermark-to-alert
                     latency (p50/p99) + window_reduce kernel throughput
   bench_delivery  — delivery layer: docs/sec vs fan-out width, flush-
@@ -28,6 +32,7 @@ def main() -> None:
         bench_alertmix,
         bench_alerts,
         bench_delivery,
+        bench_ingest,
         bench_roofline,
         bench_scaling,
         bench_serving,
@@ -37,8 +42,9 @@ def main() -> None:
 
     rows: list = []
     failures = 0
-    for mod in (bench_alertmix, bench_alerts, bench_delivery, bench_store,
-                bench_scaling, bench_serving, bench_train, bench_roofline):
+    for mod in (bench_alertmix, bench_ingest, bench_alerts, bench_delivery,
+                bench_store, bench_scaling, bench_serving, bench_train,
+                bench_roofline):
         try:
             mod.main(rows)
         except Exception:

@@ -1,8 +1,10 @@
 """The paper's own scenario: a multi-source news platform.
 
-Builds an AlertMix pipeline over 5,000 feeds, adds a breaking-news source
-mid-run with priority (PriorityStreamsActor), removes a dead feed,
-simulates a worker crash (lease-based re-pick), and searches the
+Builds an AlertMix pipeline over 5,000 feeds on an 8-shard registry,
+then drives the RUNTIME CONTROL API (repro.ingest): adds a breaking-news
+source with priority (PriorityStreamsActor), opens a brand-new channel
+fed by a push (webhook) connector, pauses/resumes a feed, removes a dead
+one, simulates a worker crash (lease-based re-pick), and searches the
 Elasticsearch-analogue index at the end.
 
   PYTHONPATH=src python examples/stream_ingest.py
@@ -14,7 +16,8 @@ from repro.core.sinks import IndexSink
 def main():
     sink = IndexSink()
     p = AlertMixPipeline(PipelineConfig(
-        num_sources=5_000, feed_interval_s=300.0, workers=16),
+        num_sources=5_000, feed_interval_s=300.0, workers=16,
+        registry_shards=8),
         seed=42, sinks=[sink])
 
     # one virtual hour of normal operation
@@ -24,18 +27,30 @@ def main():
           f"dups={p.metrics.duplicates_total} "
           f"dead_letters={p.dead_letters.total} pool={p.pool.size}")
 
-    # breaking news: add a fast source and prioritize it
-    sid = p.registry.add_source("news", url="https://breaking.example/feed",
-                                interval_s=30.0, first_due=p.now)
-    p.registry.prioritize(sid, p.now)
-    # a feed went dark: remove it on the fly (the paper's key flexibility)
-    p.registry.remove_source(17)
+    # breaking news: add a fast source and front-run the next tick
+    sid = p.add_source("news", url="https://breaking.example/feed",
+                       interval_s=30.0, prioritize=True)
+    # a webhook partner comes online: new channel + push connector, no
+    # redeploy — channels and connectors register at runtime
+    hook = p.add_source("webhooks", connector="push", interval_s=60.0)
+    p.push(hook, [{"guid": "w-1", "title": "partner market flash",
+                   "body": "pushed, not polled"}])
+    # a feed went dark: remove it on the fly (the paper's key
+    # flexibility); another is misbehaving: park it, keep its state
+    p.remove_source(17)
+    p.pause(23)
 
     p.run_for(600.0)
     src = p.registry.get(sid)
     print(f"[t+1h10] breaking-news source fetched "
           f"(etag={src.etag[:8] if src.etag else None}, "
           f"next_due in {src.next_due - p.now:.0f}s)")
+    print(f"[control] channels={p.channels()} "
+          f"connectors={p.connectors.names()} "
+          f"webhook docs indexed={p.metrics.indexed_total}")
+    print(f"[control] paused 23: "
+          f"{[d['paused'] for d in p.list_sources() if d['sid'] == 23]}")
+    p.resume(23)
 
     # simulate a worker crash mid-lease: stream is re-picked, not lost
     victim = p.registry.pick_due(p.now + 1, limit=1)

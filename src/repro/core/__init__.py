@@ -1,19 +1,46 @@
 """AlertMix core — the paper's contribution (Singhal, Pant & Sinha 2018).
 
-An end-to-end multi-source streaming platform:
+An end-to-end multi-source streaming platform, built around one
+symmetry: everything that brings data IN implements the Connector
+protocol (repro.ingest), everything that takes data OUT implements the
+Sink protocol (repro.delivery).
+
+    Connector.fetch(source, cursor, now)        Sink.emit(batch)
+        simulator / jsonl tail /                    index / jsonl /
+        event-log re-ingest / push          ->      tokens / fan-out /
+        (per-source cursor, backoff)                retry / batch
+                  INGRESS                              EGRESS
+
+Between the two sits the paper's machinery:
 
   StreamRegistry        persistent source store w/ due-dates + leases
-                        (the paper's Couchbase; at-least-once via re-pick)
+                        (the paper's Couchbase; at-least-once via
+                        re-pick); the shard unit of
+                        repro.ingest.ShardedStreamRegistry — N of them
+                        hash-sharded by sid, each with its own lock,
+                        due-heap and in-process index
   Scheduler             Bootstrapper + Cron: periodic StreamsPicker ticks
-  ChannelDistributor    routes picked streams to per-channel routers
+                        (requeues expired leases first — at-least-once)
+  ChannelDistributor    routes picked streams to per-channel routers;
+                        channels are REGISTERED at runtime
+                        (AlertMixPipeline.register_channel), not a
+                        hardcoded tuple
   BoundedPriorityQueue  bounded priority mailboxes (backpressure)
   FeedRouter            SQS pull logic: replenish-to-optimal buffers with
-                        count + timeout triggers
+                        count + timeout triggers (one per registered
+                        channel; the optimal buffer re-splits as
+                        channels register)
   BalancingPool         workers sharing one mailbox (busy->idle rebalance)
   OptimalSizeExploringResizer  throughput-hill-climbing pool sizing
   DeadLettersListener   overflow monitoring + alerting
-  Worker/dedup          conditional GET (etag/last-modified) + duplicate
-                        detection
+  Worker/dedup          Connector dispatch (conditional GET / cursor
+                        tail) + duplicate detection
+
+The runtime control API — add_source / remove_source / pause / resume /
+register_channel / register_connector / list_sources / push — lives on
+AlertMixPipeline and is re-exposed by ServeEngine(ingest=...), so the
+paper's "thousands of sources added and removed on an ongoing basis" is
+an operation, not a redeploy.
 
 Delivery (repro.delivery) — every producer's single egress:
 

@@ -28,7 +28,13 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 #: static reasons + prefixes of parameterized families, in one place so
 #: tests and docs can't drift from the code
 REASON_FAMILIES = ("mailbox_overflow", "malformed_item", "late_event",
-                   "delivery_failed:", "unknown")
+                   "delivery_failed:", "unknown",
+                   # ingestion plane (repro.ingest)
+                   "connector_error",       # Connector.fetch raised
+                   "unknown_connector",     # source names no registered one
+                   "unknown_channel",       # picked for an unopened channel
+                   "push_overflow",         # PushConnector buffer bound hit
+                   "push_source_removed")   # buffered docs of a removed source
 
 
 def reason_in_taxonomy(reason: str) -> bool:

@@ -1,16 +1,28 @@
 """AlertMixPipeline — end-to-end assembly of the paper's architecture
 (Fig. 2 + the SQS pull logic of Fig. 3):
 
-  Scheduler/Cron -> StreamsPicker -> ChannelDistributor
+  Scheduler/Cron -> StreamsPicker (ShardedStreamRegistry)
+    -> ChannelDistributor (channels REGISTERED at runtime)
     -> per-channel {main, priority} queues
     -> FeedRouter (replenish-to-optimal worker mailbox)
     -> BalancingPool workers (+ OptimalSizeExploringResizer)
-         worker: conditional GET -> redirect handling -> dedup -> enrich
+         worker: Connector.fetch (repro.ingest — conditional GET /
+                 file tail / log re-ingest / push drain, per the
+                 source's registered connector) -> redirect handling
+                 -> dedup -> enrich
                  -> delivery layer (BatchingSink -> FanOutSink -> one
                     RetryingSink per backend; repro.delivery);
-                 StreamsUpdater marks processed
+                 StreamsUpdater marks processed (cursor advances)
     -> DeadLettersListener monitors every bounded mailbox AND delivery
        failures (reason="delivery_failed:<backend>")
+
+Ingestion is pluggable (repro.ingest): sources name a Connector, the
+registry is hash-sharded (``PipelineConfig.registry_shards``), and the
+runtime control API — ``add_source`` / ``remove_source`` / ``pause`` /
+``resume`` / ``register_channel`` / ``register_connector`` /
+``list_sources`` / ``push`` — adds, parks, and removes sources and whole
+channels while the system runs (the paper's incremental-flexibility
+claim, now a first-class surface).
 
 Durability plane (``PipelineConfig.store_dir``; repro.store): accepted
 documents are teed into an append-only checksummed EventLog, every dead
@@ -31,13 +43,18 @@ from repro.core.dead_letters import DeadLettersListener
 from repro.core.dedup import DedupWindow, content_hash
 from repro.core.pool import BalancingPool
 from repro.core.queues import BoundedPriorityQueue, Message
-from repro.core.registry import StreamRegistry
 from repro.core.resizer import OptimalSizeExploringResizer
 from repro.core.router import FeedRouter
-from repro.core.scheduler import CHANNELS, ChannelDistributor, Scheduler
+from repro.core.scheduler import DEFAULT_CHANNELS, ChannelDistributor, Scheduler
 from repro.core.sinks import IndexSink
 from repro.core.sources import NOT_MODIFIED, SourceSimulator
 from repro.delivery import BatchingSink, FanOutSink, RetryingSink, as_sink
+
+# repro.ingest imports repro.core.registry (which runs this package's
+# __init__) — import it lazily to keep `import repro.ingest` first legal
+def _ingest():
+    import repro.ingest as ingest
+    return ingest
 
 
 @dataclass
@@ -56,6 +73,11 @@ class PipelineConfig:
     channel_mix: Dict[str, float] = field(default_factory=lambda: {
         "news": 0.70, "custom_rss": 0.15, "facebook": 0.08, "twitter": 0.07,
     })
+    # ---- ingestion plane (repro.ingest) ------------------------------------
+    registry_shards: int = 1           # hash shards (locks/heaps) in the
+                                       # stream registry; 1 = the seed's
+                                       # single-lock behaviour
+    push_capacity: int = 10_000        # per-source PushConnector buffer bound
     # ---- analytics stage (repro.alerts) ------------------------------------
     analytics: bool = False            # mount the windowed-analytics stage
     window_kind: str = "tumbling"      # tumbling | sliding | session
@@ -100,6 +122,7 @@ class Metrics:
     redirects_total: int = 0
     duplicates_total: int = 0
     malformed_total: int = 0
+    fetch_errors_total: int = 0        # connector raised; source backed off
     alerts_total: int = 0
     windows_closed_total: int = 0
     replayed_total: int = 0            # records re-delivered from the journal
@@ -130,8 +153,18 @@ class AlertMixPipeline:
                 replay_dedup_window=cfg.replay_dedup_window)
         self.dead_letters = DeadLettersListener(
             journal=None if self.store is None else self.store.journal)
-        self.registry = StreamRegistry(lease_s=cfg.feed_interval_s * 2)
+        ingest = _ingest()
+        self.registry = ingest.ShardedStreamRegistry(
+            shards=cfg.registry_shards, lease_s=cfg.feed_interval_s * 2)
+        # pluggable ingress: the simulator is just one registered
+        # connector; jsonl/eventlog/custom ones arrive via
+        # register_connector, push ingress via push()
         self.sim = SourceSimulator(seed=seed)
+        self._cursor_cls = ingest.Cursor
+        self.connectors = ingest.ConnectorRegistry()
+        self.connectors.register(ingest.SimulatorConnector(self.sim))
+        self.connectors.register(ingest.PushConnector(
+            capacity=cfg.push_capacity, dead_letters=self.dead_letters))
         self.item_hook = item_hook
         self.metrics = Metrics()
 
@@ -157,26 +190,27 @@ class AlertMixPipeline:
         else:
             self.delivery = self.fan_out
 
-        # one {main, priority} queue pair per channel (Fig. 2 routers)
-        self.main_queues = {
-            c: BoundedPriorityQueue(cfg.queue_capacity, dead_letters=self.dead_letters)
-            for c in CHANNELS}
-        self.priority_queues = {
-            c: BoundedPriorityQueue(cfg.queue_capacity, dead_letters=self.dead_letters)
-            for c in CHANNELS}
-        self.distributor = ChannelDistributor(self.main_queues, self.priority_queues)
+        # channels are REGISTERED, not hardcoded: each registration
+        # creates the {main, priority} queue pair (Fig. 2 routers) and a
+        # FeedRouter, and re-splits the optimal buffer across routers.
+        # The channel_mix keys seed the initial set; register_channel
+        # opens more at runtime.
+        self.distributor = ChannelDistributor(dead_letters=self.dead_letters)
+        self.main_queues = self.distributor.main_queues       # live views
+        self.priority_queues = self.distributor.priority_queues
         self.scheduler = Scheduler(
             self.registry, self.distributor,
             interval_s=cfg.pick_interval_s)
-
         self.mailbox = BoundedPriorityQueue(
             cfg.mailbox_capacity, dead_letters=self.dead_letters)
-        self.routers = [
-            FeedRouter(self.main_queues[c], self.priority_queues[c],
-                       self.mailbox, optimal_size=cfg.optimal_buffer // len(CHANNELS),
-                       replenish_after=cfg.replenish_after,
-                       replenish_timeout_s=cfg.replenish_timeout_s)
-            for c in CHANNELS]
+        self.routers: List[FeedRouter] = []
+        # keep the seed's historical registration order for the default
+        # channels: router order sets the mailbox interleaving, and the
+        # training plane's checkpoint-parity depends on that trajectory
+        initial = [c for c in DEFAULT_CHANNELS if c in cfg.channel_mix]
+        initial += [c for c in cfg.channel_mix if c not in DEFAULT_CHANNELS]
+        for c in initial:
+            self.register_channel(c)
         self.dedup = DedupWindow(cfg.dedup_window)
         resizer = OptimalSizeExploringResizer(
             lower=1, upper=max(64, cfg.workers * 4), seed=seed) if cfg.resizer else None
@@ -221,16 +255,41 @@ class AlertMixPipeline:
                 seed=i,
             )
 
-    # ---- Worker (paper): conditional GET, redirects, dedup, process -------
+    # ---- Worker (paper): connector fetch, redirects, dedup, process -------
     def _work(self, msg: Message) -> None:
         src = self.registry.get(msg.sid)
         if src is None:
             return
-        res = self.sim.fetch(src, self.now, etag=src.etag)
+        if src.paused:
+            # paused after pick: hand the lease back untouched so the
+            # source is pickable the moment it's resumed, not a full
+            # lease later
+            self.registry.release(src.sid)
+            return
+        try:
+            connector = self.connectors.get(src.connector)
+        except KeyError:
+            self.dead_letters.publish(msg, reason="unknown_connector")
+            self.registry.mark_failed(src.sid, self.now)
+            return
+        cursor = self._cursor_cls(etag=src.etag,
+                                  last_modified=src.last_modified,
+                                  position=src.position)
+        try:
+            res = connector.fetch(src, cursor, self.now)
+        except Exception as exc:      # connector fault -> backoff, not crash
+            self.metrics.fetch_errors_total += 1
+            self.dead_letters.publish(
+                {"sid": src.sid, "connector": src.connector,
+                 "error": repr(exc)},
+                reason="connector_error")
+            self.registry.mark_failed(src.sid, self.now)
+            return
         self.metrics.fetched_total += 1
         if res.status == NOT_MODIFIED:
             self.metrics.not_modified_total += 1
-            self.registry.mark_processed(src.sid, self.now, etag=res.etag)
+            self.registry.mark_processed(src.sid, self.now, etag=res.etag,
+                                         position=res.position)
             return
         if res.redirected_from:
             self.metrics.redirects_total += 1      # follow the hop
@@ -260,9 +319,112 @@ class AlertMixPipeline:
             self.delivery.emit(out_batch)
         self.metrics.indexed_total += accepted
         self.registry.mark_processed(
-            src.sid, self.now, etag=res.etag, last_modified=res.last_modified)
+            src.sid, self.now, etag=res.etag, last_modified=res.last_modified,
+            position=res.position)
         for r in self.routers:
             r.on_processed()
+
+    # ---- runtime control API (repro.ingest) --------------------------------
+    def register_channel(self, name: str) -> bool:
+        """Open a channel at runtime: create its {main, priority} queue
+        pair, register it with the distributor, mount a FeedRouter, and
+        re-split the global optimal buffer across all routers.  Returns
+        False if the channel already exists."""
+        if name in self.distributor.main_queues:
+            return False
+        cfg = self.cfg
+        main_q = BoundedPriorityQueue(cfg.queue_capacity,
+                                      dead_letters=self.dead_letters)
+        prio_q = BoundedPriorityQueue(cfg.queue_capacity,
+                                      dead_letters=self.dead_letters)
+        self.distributor.register_channel(name, main_q, prio_q)
+        self.routers.append(FeedRouter(
+            main_q, prio_q, self.mailbox,
+            optimal_size=cfg.optimal_buffer,
+            replenish_after=cfg.replenish_after,
+            replenish_timeout_s=cfg.replenish_timeout_s,
+            channel=name))
+        per_router = max(1, cfg.optimal_buffer // len(self.routers))
+        for r in self.routers:
+            r.set_optimal_size(per_router)
+        return True
+
+    def channels(self) -> tuple:
+        return self.distributor.channels()
+
+    def register_connector(self, connector, name: Optional[str] = None) -> str:
+        """Mount a Connector implementation; sources reference it by the
+        returned name (``add_source(..., connector=name)``)."""
+        return self.connectors.register(connector, name)
+
+    def add_source(self, channel: str, *, url: str = "",
+                   interval_s: Optional[float] = None, priority: int = 1,
+                   first_due: Optional[float] = None, seed: int = 0,
+                   connector: str = "sim", prioritize: bool = False) -> int:
+        """Incrementally add a source while the pipeline runs (the
+        paper's key flexibility claim).  Auto-registers the channel;
+        fails fast on an unregistered connector.  ``first_due`` defaults
+        to the current virtual time; ``prioritize`` front-runs the next
+        tick (PriorityStreamsActor)."""
+        if connector not in self.connectors:
+            raise KeyError(
+                f"unknown connector {connector!r}; registered: "
+                f"{self.connectors.names()}")
+        self.register_channel(channel)
+        sid = self.registry.add_source(
+            channel, url=url,
+            interval_s=(self.cfg.feed_interval_s if interval_s is None
+                        else interval_s),
+            priority=priority,
+            first_due=self.now if first_due is None else first_due,
+            seed=seed, connector=connector)
+        if prioritize:
+            self.registry.prioritize(sid, self.now)
+        return sid
+
+    def remove_source(self, sid: int) -> bool:
+        src = self.registry.get(sid)
+        removed = self.registry.remove_source(sid)
+        if removed and src is not None and src.connector in self.connectors:
+            # a push-capable connector may hold buffered docs for this
+            # source; discard them (dead-lettered) or they strand forever
+            connector = self.connectors.get(src.connector)
+            if hasattr(connector, "discard"):
+                connector.discard(sid)
+        return removed
+
+    def pause(self, sid: int) -> bool:
+        """Park a source: it stays registered but is skipped by the
+        picker until ``resume``."""
+        return self.registry.pause(sid)
+
+    def resume(self, sid: int) -> bool:
+        return self.registry.resume(sid)
+
+    def list_sources(self, *, channel: Optional[str] = None) -> List[dict]:
+        """Describe every registered source (sid, channel, connector,
+        status, paused, cursor fields...), optionally filtered by
+        channel."""
+        out = self.registry.describe()
+        if channel is not None:
+            out = [d for d in out if d["channel"] == channel]
+        return out
+
+    def push(self, sid: int, docs: list) -> int:
+        """Push-style ingress: hand documents to source ``sid``'s
+        PushConnector and prioritize the source so they drain on the
+        next scheduler tick, not a full feed interval later."""
+        src = self.registry.get(sid)
+        if src is None:
+            raise KeyError(f"no source {sid}")
+        connector = self.connectors.get(src.connector)
+        if not hasattr(connector, "push"):
+            raise TypeError(
+                f"source {sid} uses connector {src.connector!r}, which is "
+                f"not push-capable")
+        accepted = connector.push(sid, docs, now=self.now)
+        self.registry.prioritize(sid, self.now)
+        return accepted
 
     # ---- virtual-time drive ------------------------------------------------
     def step(self, dt: float = 1.0, per_worker: int = 4) -> dict:
@@ -389,6 +551,14 @@ class AlertMixPipeline:
         return {"now": self.now, "registry": self.registry.snapshot()}
 
     def restore_registry(self, snap: dict) -> None:
+        """Accepts snapshots from either registry flavour (the sharded
+        format is a superset of the seed's single-registry one).
+        Channels the snapshot references are re-registered: a runtime-
+        added channel must come back with its queues/router, or its
+        restored sources would dead-letter as unknown_channel forever."""
         self.now = snap["now"]
-        self.registry = StreamRegistry.restore(snap["registry"])
+        self.registry = _ingest().ShardedStreamRegistry.restore(
+            snap["registry"], shards=self.cfg.registry_shards)
         self.scheduler.registry = self.registry
+        for d in snap["registry"]["sources"]:
+            self.register_channel(d["channel"])

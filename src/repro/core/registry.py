@@ -9,16 +9,24 @@ Responsibilities (paper §Proposed approach):
   * picked streams are marked in-process; completion sets next_due
 
 The due-date index is a lazy heap over (next_due, sid): scales to the
-paper's 200k sources (pick is O(k log n)).  ``snapshot``/``restore`` make
-the registry checkpointable next to model state (fault tolerance).
+paper's 200k sources (pick is O(k log n)).  Stale heap entries are
+bounded — ``remove_source`` compacts the heap once stale entries exceed
+~2x the live source count, so churn-heavy registries don't grow the heap
+forever.  ``requeue_expired`` scans only the in-process index, not every
+source.  ``snapshot``/``restore`` make the registry checkpointable next
+to model state (fault tolerance).
+
+This single-lock registry doubles as the shard unit of
+``repro.ingest.ShardedStreamRegistry`` (N of these behind N independent
+locks, hash-sharded by sid).
 """
 from __future__ import annotations
 
 import enum
 import heapq
 import threading
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
 
 
 class StreamStatus(enum.Enum):
@@ -29,7 +37,7 @@ class StreamStatus(enum.Enum):
 @dataclass
 class StreamSource:
     sid: int
-    channel: str                  # facebook | twitter | news | custom_rss
+    channel: str                  # any registered channel name
     url: str = ""
     interval_s: float = 300.0     # paper: every 5 minutes
     priority: int = 1             # 0 = highest (PriorityStreamsActor)
@@ -40,12 +48,44 @@ class StreamSource:
     last_modified: Optional[float] = None
     fail_count: int = 0
     seed: int = 0                 # drives the simulated feed content
+    connector: str = "sim"        # repro.ingest connector serving this source
+    position: int = 0             # byte/offset cursor for tailing connectors
+    paused: bool = False          # control-API pause: skipped by pick_due
+
+
+def source_snapshot_dict(s: StreamSource) -> dict:
+    """One source as a snapshot record (shared with the sharded registry
+    so both snapshot formats stay byte-compatible)."""
+    return {
+        "sid": s.sid, "channel": s.channel, "url": s.url,
+        "interval_s": s.interval_s, "priority": s.priority,
+        "next_due": s.next_due, "etag": s.etag,
+        "last_modified": s.last_modified,
+        "fail_count": s.fail_count, "seed": s.seed,
+        "connector": s.connector, "position": s.position,
+        "paused": s.paused,
+        # in-process reverts to idle on restore: the lease
+        # holder is gone -> at-least-once re-pick
+    }
+
+
+def source_from_snapshot(d: dict) -> StreamSource:
+    """Inverse of ``source_snapshot_dict``; tolerates pre-ingest
+    snapshots that lack connector/position/paused."""
+    return StreamSource(
+        d["sid"], d["channel"], d["url"], d["interval_s"],
+        d["priority"], next_due=d["next_due"], etag=d["etag"],
+        last_modified=d["last_modified"], fail_count=d["fail_count"],
+        seed=d["seed"], connector=d.get("connector", "sim"),
+        position=d.get("position", 0), paused=d.get("paused", False),
+    )
 
 
 class StreamRegistry:
     def __init__(self, lease_s: float = 600.0):
         self._sources: Dict[int, StreamSource] = {}
         self._heap: List[Tuple[float, int]] = []      # (next_due, sid), lazy
+        self._in_process: Set[int] = set()            # requeue scans only this
         self._lock = threading.Lock()
         self._next_sid = 0
         self.lease_s = lease_s
@@ -53,25 +93,92 @@ class StreamRegistry:
     # ---- source management (incremental add/remove — the paper's key
     # flexibility claim over Kinesis/Storm/etc.) ----------------------------
     def add_source(self, channel: str, *, url: str = "", interval_s: float = 300.0,
-                   priority: int = 1, first_due: float = 0.0, seed: int = 0) -> int:
+                   priority: int = 1, first_due: float = 0.0, seed: int = 0,
+                   connector: str = "sim") -> int:
         with self._lock:
             sid = self._next_sid
             self._next_sid += 1
             src = StreamSource(sid, channel, url, interval_s, priority,
-                               next_due=first_due, seed=seed or sid)
+                               next_due=first_due, seed=seed or sid,
+                               connector=connector)
             self._sources[sid] = src
             heapq.heappush(self._heap, (src.next_due, sid))
             return sid
 
+    def insert(self, src: StreamSource) -> None:
+        """Insert a fully-formed source (sid allocated elsewhere) — the
+        sharded registry's per-shard add path, also used by restore."""
+        with self._lock:
+            self._sources[src.sid] = src
+            self._next_sid = max(self._next_sid, src.sid + 1)
+            if src.status is StreamStatus.IN_PROCESS:
+                self._in_process.add(src.sid)
+            else:
+                heapq.heappush(self._heap, (src.next_due, src.sid))
+
     def remove_source(self, sid: int) -> bool:
         with self._lock:
-            return self._sources.pop(sid, None) is not None  # heap entry lazy
+            src = self._sources.pop(sid, None)        # heap entry lazy
+            self._in_process.discard(sid)
+            self._maybe_compact_locked()
+            return src is not None
 
     def get(self, sid: int) -> Optional[StreamSource]:
-        return self._sources.get(sid)
+        with self._lock:
+            return self._sources.get(sid)
 
     def __len__(self) -> int:
-        return len(self._sources)
+        with self._lock:
+            return len(self._sources)
+
+    def _maybe_compact_locked(self) -> None:
+        """Bound lazy heap garbage: once stale entries exceed ~2x the live
+        source count, rebuild the heap with exactly one entry per idle
+        source (in-process/paused sources re-enter via requeue/resume)."""
+        live = len(self._sources)
+        if len(self._heap) - live <= 2 * live + 16:
+            return
+        heap = [(s.next_due, s.sid) for s in self._sources.values()
+                if s.status is not StreamStatus.IN_PROCESS and not s.paused]
+        heapq.heapify(heap)
+        self._heap = heap
+
+    # ---- control surface (runtime pause/resume) ----------------------------
+    def pause(self, sid: int) -> bool:
+        """Park a source: pick_due skips it (and drops its heap entry)
+        until ``resume``; an in-flight lease is allowed to finish."""
+        with self._lock:
+            src = self._sources.get(sid)
+            if src is None:
+                return False
+            src.paused = True
+            return True
+
+    def release(self, sid: int) -> None:
+        """Give back a lease WITHOUT completing a cycle: status reverts
+        to IDLE and next_due is untouched (a worker that decided not to
+        process — e.g. the source was paused after pick — must not leave
+        the source unpickable for the rest of the lease)."""
+        with self._lock:
+            src = self._sources.get(sid)
+            if src is None or src.status is not StreamStatus.IN_PROCESS:
+                return
+            src.status = StreamStatus.IDLE
+            src.lease_until = 0.0
+            self._in_process.discard(sid)
+            if not src.paused:
+                heapq.heappush(self._heap, (src.next_due, sid))
+
+    def resume(self, sid: int) -> bool:
+        with self._lock:
+            src = self._sources.get(sid)
+            if src is None:
+                return False
+            if src.paused:
+                src.paused = False
+                if src.status is not StreamStatus.IN_PROCESS:
+                    heapq.heappush(self._heap, (src.next_due, sid))
+            return True
 
     # ---- StreamsPickerActor ------------------------------------------------
     def pick_due(self, now: float, limit: int = 10_000) -> List[StreamSource]:
@@ -87,6 +194,8 @@ class StreamRegistry:
                 src = self._sources.get(sid)
                 if src is None:
                     continue                      # removed; lazy-deleted
+                if src.paused:
+                    continue                      # parked; resume re-pushes
                 if src.status is StreamStatus.IN_PROCESS:
                     if src.lease_until > now:
                         continue                  # someone holds a live lease
@@ -95,35 +204,48 @@ class StreamRegistry:
                     continue                      # stale heap entry
                 src.status = StreamStatus.IN_PROCESS
                 src.lease_until = now + self.lease_s
+                self._in_process.add(sid)
                 out.append(src)
         return out
 
     def requeue_expired(self, now: float) -> int:
-        """Push lease-expired in-process streams back onto the due heap."""
+        """Push lease-expired in-process streams back onto the due heap.
+        O(in-process), not O(total sources): only the in-process index is
+        scanned, so the scheduler can afford this every tick."""
         n = 0
         with self._lock:
-            for src in self._sources.values():
+            for sid in list(self._in_process):
+                src = self._sources.get(sid)
+                if src is None:
+                    self._in_process.discard(sid)
+                    continue
                 if src.status is StreamStatus.IN_PROCESS and src.lease_until <= now:
                     src.status = StreamStatus.IDLE
-                    heapq.heappush(self._heap, (src.next_due, sid := src.sid))
+                    self._in_process.discard(sid)
+                    heapq.heappush(self._heap, (src.next_due, sid))
                     n += 1
         return n
 
     # ---- StreamsUpdaterActor -----------------------------------------------
     def mark_processed(self, sid: int, now: float, *, etag: Optional[str] = None,
-                       last_modified: Optional[float] = None) -> None:
+                       last_modified: Optional[float] = None,
+                       position: Optional[int] = None) -> None:
         with self._lock:
             src = self._sources.get(sid)
             if src is None:
                 return
             src.status = StreamStatus.IDLE
+            self._in_process.discard(sid)
             src.fail_count = 0
             if etag is not None:
                 src.etag = etag
             if last_modified is not None:
                 src.last_modified = last_modified
+            if position is not None:
+                src.position = position
             src.next_due = now + src.interval_s
-            heapq.heappush(self._heap, (src.next_due, sid))
+            if not src.paused:
+                heapq.heappush(self._heap, (src.next_due, sid))
 
     def mark_failed(self, sid: int, now: float, *, backoff: float = 2.0) -> None:
         with self._lock:
@@ -131,11 +253,13 @@ class StreamRegistry:
             if src is None:
                 return
             src.status = StreamStatus.IDLE
+            self._in_process.discard(sid)
             src.fail_count += 1
             delay = min(src.interval_s * backoff ** src.fail_count,
                         86_400.0)
             src.next_due = now + delay
-            heapq.heappush(self._heap, (src.next_due, sid))
+            if not src.paused:
+                heapq.heappush(self._heap, (src.next_due, sid))
 
     def prioritize(self, sid: int, now: float) -> None:
         """PriorityStreamsActor: bump a stream (e.g. newly created) to the
@@ -148,24 +272,24 @@ class StreamRegistry:
             src.next_due = now
             heapq.heappush(self._heap, (now, sid))
 
+    def describe(self) -> List[dict]:
+        """Control-API view (``list_sources``): snapshot records plus the
+        live status/lease fields the snapshot deliberately omits."""
+        with self._lock:
+            return [
+                {**source_snapshot_dict(s), "status": s.status.name,
+                 "lease_until": s.lease_until}
+                for s in self._sources.values()
+            ]
+
     # ---- persistence (checkpoint with the model) ---------------------------
     def snapshot(self) -> dict:
         with self._lock:
             return {
                 "lease_s": self.lease_s,
                 "next_sid": self._next_sid,
-                "sources": [
-                    {
-                        "sid": s.sid, "channel": s.channel, "url": s.url,
-                        "interval_s": s.interval_s, "priority": s.priority,
-                        "next_due": s.next_due, "etag": s.etag,
-                        "last_modified": s.last_modified,
-                        "fail_count": s.fail_count, "seed": s.seed,
-                        # in-process reverts to idle on restore: the lease
-                        # holder is gone -> at-least-once re-pick
-                    }
-                    for s in self._sources.values()
-                ],
+                "sources": [source_snapshot_dict(s)
+                            for s in self._sources.values()],
             }
 
     @classmethod
@@ -173,12 +297,8 @@ class StreamRegistry:
         reg = cls(lease_s=snap["lease_s"])
         reg._next_sid = snap["next_sid"]
         for d in snap["sources"]:
-            src = StreamSource(
-                d["sid"], d["channel"], d["url"], d["interval_s"],
-                d["priority"], next_due=d["next_due"], etag=d["etag"],
-                last_modified=d["last_modified"], fail_count=d["fail_count"],
-                seed=d["seed"],
-            )
+            src = source_from_snapshot(d)
             reg._sources[src.sid] = src
-            heapq.heappush(reg._heap, (src.next_due, src.sid))
+            if not src.paused:
+                heapq.heappush(reg._heap, (src.next_due, src.sid))
         return reg

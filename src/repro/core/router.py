@@ -33,10 +33,12 @@ class FeedRouter:
                  mailbox: BoundedPriorityQueue, *,
                  optimal_size: int = 256,
                  replenish_after: int = 64,
-                 replenish_timeout_s: float = 1.0):
+                 replenish_timeout_s: float = 1.0,
+                 channel: str = ""):
         self.main_queue = main_queue
         self.priority_queue = priority_queue
         self.mailbox = mailbox
+        self.channel = channel        # registered channel this router serves
         self.optimal_size = optimal_size
         self.replenish_after = replenish_after
         self.replenish_timeout_s = replenish_timeout_s
@@ -48,6 +50,11 @@ class FeedRouter:
     # workers call this after finishing an item
     def on_processed(self, n: int = 1) -> None:
         self.processed_since_replenish += n
+
+    def set_optimal_size(self, n: int) -> None:
+        """Control-API rebalance: registering a new channel re-splits the
+        pipeline's global optimal buffer across its routers."""
+        self.optimal_size = max(1, n)
 
     def maybe_replenish(self, now: float) -> int:
         """Apply triggers (b), (c), and the low-watermark implied by (a)

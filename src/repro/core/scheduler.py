@@ -1,36 +1,63 @@
 """Bootstrapper + Cron + StreamsPickerActor + ChannelDistributorActor.
 
 The scheduler ticks at a fixed interval (paper: cron every ~5s; picker
-every 15 min), asks the registry for due streams, and distributes them to
-per-channel routers' queues (facebook / twitter / news / custom_rss).
-Priority-0 streams go to the priority queue (PriorityStreamsActor path).
+every 15 min), requeues expired leases (at-least-once), asks the
+registry for due streams, and distributes them to per-channel routers'
+queues.  Channels are REGISTERED at runtime (``register_channel``), not
+hardcoded: the pipeline's control API can open a new channel — its
+queues and router — while the system runs.  Priority-0 streams go to the
+priority queue (PriorityStreamsActor path).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional
 
 from repro.core.queues import BoundedPriorityQueue, Message
-from repro.core.registry import StreamRegistry
 
-CHANNELS = ("facebook", "twitter", "news", "custom_rss")
+# One-release compat shim: the historical hardcoded channel set.  New
+# code registers channels on the pipeline/distributor instead; this
+# tuple only seeds PipelineConfig's default channel mix.
+DEFAULT_CHANNELS = ("facebook", "twitter", "news", "custom_rss")
+CHANNELS = DEFAULT_CHANNELS
 
 
-@dataclass
 class ChannelDistributor:
-    """Finds the channel of each picked stream and routes it."""
+    """Finds the channel of each picked stream and routes it.  Channels
+    (and their queue pairs) are registered dynamically; a stream picked
+    for an unregistered channel is dead-lettered (``unknown_channel``)
+    rather than silently dropped."""
 
-    main_queues: Dict[str, BoundedPriorityQueue]
-    priority_queues: Dict[str, BoundedPriorityQueue]
-    routed: int = 0
+    def __init__(self,
+                 main_queues: Optional[Dict[str, BoundedPriorityQueue]] = None,
+                 priority_queues: Optional[Dict[str, BoundedPriorityQueue]] = None,
+                 *, dead_letters=None):
+        self.main_queues: Dict[str, BoundedPriorityQueue] = dict(main_queues or {})
+        self.priority_queues: Dict[str, BoundedPriorityQueue] = dict(priority_queues or {})
+        self.dead_letters = dead_letters
+        self.routed = 0
+        self.unroutable = 0
+
+    def register_channel(self, name: str, main_queue: BoundedPriorityQueue,
+                         priority_queue: BoundedPriorityQueue) -> None:
+        self.main_queues[name] = main_queue
+        self.priority_queues[name] = priority_queue
+
+    def channels(self) -> tuple:
+        return tuple(self.main_queues)
 
     def distribute(self, streams: Iterable, now: float) -> int:
         n = 0
         for src in streams:
             msg = Message(priority=src.priority, payload=None, sid=src.sid,
                           channel=src.channel, enqueued_at=now)
-            q = (self.priority_queues if src.priority == 0
-                 else self.main_queues)[src.channel]
+            queues = (self.priority_queues if src.priority == 0
+                      else self.main_queues)
+            q = queues.get(src.channel)
+            if q is None:
+                self.unroutable += 1
+                if self.dead_letters is not None:
+                    self.dead_letters.publish(msg, reason="unknown_channel")
+                continue
             q.offer(msg)
             n += 1
         self.routed += n
@@ -40,8 +67,7 @@ class ChannelDistributor:
 class Scheduler:
     """Cron: fires `tick(now)` every `interval_s` of (virtual) time."""
 
-    def __init__(self, registry: StreamRegistry,
-                 distributor: ChannelDistributor, *,
+    def __init__(self, registry, distributor: ChannelDistributor, *,
                  interval_s: float = 5.0, pick_limit: int = 10_000):
         self.registry = registry
         self.distributor = distributor
@@ -49,12 +75,16 @@ class Scheduler:
         self.pick_limit = pick_limit
         self._next_tick = 0.0
         self.picked_total = 0
+        self.requeued_total = 0
         self.tick_log: List[tuple] = []           # (now, picked) for Fig-4
 
     def maybe_tick(self, now: float) -> int:
         if now < self._next_tick:
             return 0
         self._next_tick = now + self.interval_s
+        # at-least-once: leases whose holder died re-enter the due heap
+        # before the pick (O(in-process), so it's affordable every tick)
+        self.requeued_total += self.registry.requeue_expired(now)
         due = self.registry.pick_due(now, self.pick_limit)
         n = self.distributor.distribute(due, now)
         self.picked_total += n

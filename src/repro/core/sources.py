@@ -46,6 +46,7 @@ class FetchResult:
     etag: Optional[str] = None
     last_modified: Optional[float] = None
     redirected_from: Optional[str] = None
+    position: Optional[int] = None    # cursor advance for tailing connectors
 
 
 class SourceSimulator:
@@ -81,8 +82,7 @@ class SourceSimulator:
         items: List[FeedItem] = []
         for b in range(bucket0, bucket1 + 1):
             rng = self._rng(src, b)
-            n = rng.poissonvariate(self._rate(src, b * 3600.0)) \
-                if hasattr(rng, "poissonvariate") else self._poisson(rng, self._rate(src, b * 3600.0))
+            n = self._poisson(rng, self._rate(src, b * 3600.0))
             for i in range(n):
                 t = b * 3600.0 + rng.random() * 3600.0
                 if not (since < t <= now):
@@ -97,11 +97,11 @@ class SourceSimulator:
                     guid=guid, title=title, body=body, published_at=t,
                     malformed=rng.random() < self.malformed_fraction,
                 ))
+        if not items and etag is not None:
+            return FetchResult(NOT_MODIFIED, etag=etag, last_modified=since)
         new_etag = hashlib.md5(
             f"{src.sid}:{len(items)}:{int(now // src.interval_s)}".encode()
         ).hexdigest()
-        if not items and etag is not None:
-            return FetchResult(NOT_MODIFIED, etag=etag, last_modified=since)
         rng = self._rng(src, int(now))
         status = REDIRECT if rng.random() < self.redirect_fraction else OK
         return FetchResult(status, items=items, etag=new_etag,

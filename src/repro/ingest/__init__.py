@@ -1,0 +1,49 @@
+"""repro.ingest — the pluggable ingestion plane.
+
+PR 2 put every producer's egress behind one Sink protocol; this package
+is the symmetric redesign for ingress:
+
+  Connector / Cursor      fetch(source, cursor, now) -> FetchResult —
+                          the one surface every polled source system
+                          implements (connectors.py)
+  SimulatorConnector      the seed's SourceSimulator as just one
+                          registered implementation
+  JsonlTailConnector      byte-offset tail of a jsonl file
+  EventLogConnector       record-offset re-ingest of a repro.store
+                          EventLog (the durability plane as a source)
+  PushConnector           push-style ingress (webhooks) with bounded
+                          per-source buffers
+  ConnectorRegistry       name -> connector map the pipeline worker
+                          consults per fetch
+  ShardedStreamRegistry   N hash-sharded single-lock registries: per-
+                          shard due-heaps/locks/in-process indexes,
+                          round-robin pick_due, snapshot-compatible with
+                          StreamRegistry (registry.py)
+
+The runtime control API lives on ``AlertMixPipeline`` (add_source /
+remove_source / pause / resume / register_channel / register_connector /
+list_sources / push) and is re-exposed by ``ServeEngine(ingest=...)``.
+"""
+from repro.ingest.connectors import (
+    Connector,
+    ConnectorRegistry,
+    Cursor,
+    EventLogConnector,
+    JsonlTailConnector,
+    PushConnector,
+    SimulatorConnector,
+    as_feed_item,
+)
+from repro.ingest.registry import ShardedStreamRegistry
+
+__all__ = [
+    "Connector",
+    "ConnectorRegistry",
+    "Cursor",
+    "EventLogConnector",
+    "JsonlTailConnector",
+    "PushConnector",
+    "ShardedStreamRegistry",
+    "SimulatorConnector",
+    "as_feed_item",
+]

@@ -1,0 +1,304 @@
+"""Connector protocol — the ingress mirror of ``repro.delivery``'s Sink.
+
+Everything that brings data INTO the platform implements one small
+surface: ``fetch(source, cursor, now) -> FetchResult``.  The pipeline
+worker builds the cursor from the source's durable fields (etag /
+last_modified / position), calls the connector named by
+``StreamSource.connector``, and routes the resulting FeedItems through
+the unchanged dedup -> analytics -> delivery path.  Adding a source
+system is one class + one ``register_connector`` call — the
+connector-per-source-system shape of Uber's real-time stack.
+
+Shipped connectors:
+
+  SimulatorConnector  the seed's SourceSimulator, now just one
+                      registered implementation ("sim")
+  JsonlTailConnector  tails a jsonl file by byte offset; torn tail lines
+                      are left for the next poll ("jsonl")
+  EventLogConnector   re-ingests a repro.store EventLog from a record
+                      offset — the durability plane as a first-class
+                      source ("eventlog")
+  PushConnector       push-style ingress (webhooks): callers ``push``
+                      documents; the bound source drains them on its
+                      next pick ("push")
+"""
+from __future__ import annotations
+
+import json
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
+
+from repro.core.registry import StreamSource
+from repro.core.sources import (
+    NOT_MODIFIED,
+    OK,
+    FeedItem,
+    FetchResult,
+    SourceSimulator,
+)
+
+
+@dataclass
+class Cursor:
+    """Durable per-source read position, rebuilt from the registry on
+    every fetch (connectors stay stateless per-source; PushConnector's
+    buffer is the one deliberate exception)."""
+
+    etag: Optional[str] = None
+    last_modified: Optional[float] = None
+    position: int = 0             # byte offset (files) / record offset (logs)
+
+
+@runtime_checkable
+class Connector(Protocol):
+    """Polled ingress: return everything published since ``cursor``."""
+
+    name: str
+
+    def fetch(self, source: StreamSource, cursor: Cursor,
+              now: float) -> FetchResult: ...
+
+
+def as_feed_item(obj, *, guid: str, now: float) -> FeedItem:
+    """Coerce a pushed/parsed record into a FeedItem.  Dicts may carry
+    guid/title/body/published_at; anything else becomes an opaque body.
+    A non-numeric published_at marks the item malformed (it dead-letters
+    downstream) instead of raising — a raise out of fetch would leave
+    the cursor unadvanced and wedge the source on the bad record."""
+    if isinstance(obj, FeedItem):
+        return obj
+    if isinstance(obj, dict):
+        malformed = bool(obj.get("malformed", False))
+        try:
+            published_at = float(obj.get("published_at", now))
+        except (TypeError, ValueError):
+            published_at, malformed = now, True
+        return FeedItem(
+            guid=str(obj.get("guid", guid)),
+            title=str(obj.get("title", "")),
+            body=str(obj.get("body", "")),
+            published_at=published_at,
+            malformed=malformed,
+        )
+    return FeedItem(guid=guid, title="", body=str(obj), published_at=now)
+
+
+class SimulatorConnector:
+    """The seed's SourceSimulator behind the Connector surface — the
+    default for sources that don't name a connector."""
+
+    def __init__(self, sim: Optional[SourceSimulator] = None, *,
+                 name: str = "sim"):
+        self.sim = sim if sim is not None else SourceSimulator()
+        self.name = name
+
+    def fetch(self, source: StreamSource, cursor: Cursor,
+              now: float) -> FetchResult:
+        return self.sim.fetch(source, now, etag=cursor.etag)
+
+
+class JsonlTailConnector:
+    """Tail a jsonl file: each fetch consumes the complete lines appended
+    since ``cursor.position`` (a byte offset).  A torn final line (no
+    newline yet — a writer mid-append) is left for the next poll.  Lines
+    that fail to parse become malformed FeedItems so they dead-letter
+    through the normal worker path instead of wedging the tail.
+
+    The file path comes from ``source.url`` (``file://`` prefix okay),
+    falling back to the connector-level ``path``.
+    """
+
+    def __init__(self, path: Optional[str] = None, *, name: str = "jsonl",
+                 max_bytes: int = 4 << 20):
+        self.name = name
+        self.path = path
+        self.max_bytes = max_bytes
+
+    def _path_for(self, source: StreamSource) -> str:
+        url = source.url or self.path or ""
+        if url.startswith("file://"):
+            url = url[len("file://"):]
+        if not url:
+            raise FileNotFoundError(
+                f"jsonl connector: source {source.sid} has no url and no "
+                f"default path")
+        return url
+
+    def fetch(self, source: StreamSource, cursor: Cursor,
+              now: float) -> FetchResult:
+        path = self._path_for(source)
+        with open(path, "rb") as fh:
+            fh.seek(cursor.position)
+            data = fh.read(self.max_bytes)
+        end = data.rfind(b"\n")
+        if end < 0:
+            if len(data) < self.max_bytes:    # genuine torn tail: wait
+                return FetchResult(NOT_MODIFIED, etag=cursor.etag,
+                                   position=cursor.position)
+            # a single line longer than the read window would otherwise
+            # stall the tail forever: skip the window as one malformed
+            # item so the poison line surfaces AND the cursor advances
+            return FetchResult(OK, items=[FeedItem(
+                guid=f"{self.name}:{path}:{cursor.position}:oversized",
+                title="", body=data[:256].decode("utf-8", "replace"),
+                published_at=now, malformed=True)],
+                last_modified=now,
+                position=cursor.position + len(data))
+        new_pos = cursor.position + end + 1
+        items: List[FeedItem] = []
+        for i, line in enumerate(data[:end + 1].splitlines()):
+            if not line.strip():
+                continue
+            guid = f"{self.name}:{path}:{cursor.position}:{i}"
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                items.append(FeedItem(
+                    guid=guid, title="",
+                    body=line.decode("utf-8", "replace"),
+                    published_at=now, malformed=True))
+                continue
+            items.append(as_feed_item(rec, guid=guid, now=now))
+        if not items:                     # only blank lines: just advance
+            return FetchResult(NOT_MODIFIED, etag=cursor.etag,
+                               position=new_pos)
+        return FetchResult(OK, items=items, last_modified=now,
+                           position=new_pos)
+
+
+class EventLogConnector:
+    """Re-ingest a ``repro.store.EventLog`` as a source: the cursor is a
+    record offset into the log, so a pipeline can treat another
+    pipeline's durable document log (or its own, for reprocessing) as
+    just one more feed.  Payloads in the pipeline's own tee format
+    (``{"id":..., "doc": {...}}``) keep their original guid — dedup makes
+    re-ingest idempotent against live delivery of the same documents."""
+
+    def __init__(self, log, *, name: str = "eventlog",
+                 max_records: int = 1024):
+        if isinstance(log, str):
+            from repro.store import EventLog   # lazy: keep ingest light
+            log = EventLog(log)
+        self.log = log
+        self.name = name
+        self.max_records = max_records
+
+    def fetch(self, source: StreamSource, cursor: Cursor,
+              now: float) -> FetchResult:
+        items: List[FeedItem] = []
+        last = cursor.position - 1
+        for offset, payload in self.log.scan(cursor.position):
+            last = offset
+            guid = f"{self.name}:{offset}"
+            doc = payload
+            if isinstance(payload, dict) and "doc" in payload:
+                guid = str(payload.get("id", guid))
+                doc = payload["doc"]
+            if not isinstance(doc, dict):
+                doc = {"body": str(doc)}
+            items.append(as_feed_item({**doc, "guid": guid}, guid=guid,
+                                      now=now))
+            if len(items) >= self.max_records:
+                break
+        if not items:
+            return FetchResult(NOT_MODIFIED, etag=cursor.etag,
+                               position=cursor.position)
+        return FetchResult(OK, items=items, last_modified=now,
+                           position=last + 1)
+
+
+class PushConnector:
+    """Push-style ingress (webhooks): producers call ``push(sid, docs)``
+    at any time; the buffered documents drain through the normal worker
+    path the next time source ``sid`` is picked.  The pipeline's
+    ``push()`` wrapper also prioritizes the source so that happens on the
+    next scheduler tick, not a full interval later.  Per-source buffers
+    are bounded — overflow dead-letters (reason ``push_overflow``)
+    instead of growing without bound."""
+
+    def __init__(self, *, name: str = "push", capacity: int = 10_000,
+                 dead_letters=None):
+        self.name = name
+        self.capacity = capacity
+        self.dead_letters = dead_letters
+        self._buf: Dict[int, List[FeedItem]] = {}
+        self._lock = threading.Lock()
+        self.pushed = 0
+        self.dropped = 0
+
+    def push(self, sid: int, docs: Sequence, *, now: float = 0.0) -> int:
+        """Enqueue documents for source ``sid``; returns how many were
+        accepted (the rest dead-lettered on overflow)."""
+        accepted = 0
+        overflow = []
+        with self._lock:
+            buf = self._buf.setdefault(sid, [])
+            for d in docs:
+                if len(buf) >= self.capacity:
+                    self.dropped += 1
+                    overflow.append(d)
+                    continue
+                buf.append(as_feed_item(d, guid=f"push-{sid}-{self.pushed}",
+                                        now=now))
+                self.pushed += 1
+                accepted += 1
+        # publish outside the lock: a durable journal write must not
+        # serialize every concurrent push/fetch behind disk latency
+        if self.dead_letters is not None:
+            for d in overflow:
+                self.dead_letters.publish(d, reason="push_overflow")
+        return accepted
+
+    def pending(self, sid: Optional[int] = None) -> int:
+        with self._lock:
+            if sid is not None:
+                return len(self._buf.get(sid, ()))
+            return sum(len(b) for b in self._buf.values())
+
+    def discard(self, sid: int) -> int:
+        """Drop (and dead-letter, for visibility) everything buffered for
+        a source — called when the source is removed, so buffers don't
+        strand in memory forever (sids are never reused)."""
+        with self._lock:
+            items = self._buf.pop(sid, [])
+        if self.dead_letters is not None:
+            for item in items:
+                self.dead_letters.publish(item, reason="push_source_removed")
+        return len(items)
+
+    def fetch(self, source: StreamSource, cursor: Cursor,
+              now: float) -> FetchResult:
+        with self._lock:
+            items = self._buf.pop(source.sid, [])
+        if not items:
+            return FetchResult(NOT_MODIFIED, etag=cursor.etag)
+        return FetchResult(OK, items=items, last_modified=now)
+
+
+class ConnectorRegistry:
+    """Name -> Connector map consulted by the pipeline worker on every
+    fetch.  Names are the values sources carry in
+    ``StreamSource.connector``."""
+
+    def __init__(self):
+        self._by_name: Dict[str, Connector] = {}
+
+    def register(self, connector, name: Optional[str] = None) -> str:
+        name = name or getattr(connector, "name", None)
+        if not name:
+            raise ValueError("connector has no name")
+        self._by_name[name] = connector
+        return name
+
+    def get(self, name: str):
+        return self._by_name[name]        # KeyError -> unknown_connector
+
+    def names(self) -> tuple:
+        return tuple(sorted(self._by_name))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._by_name
+
+    def __len__(self) -> int:
+        return len(self._by_name)

@@ -1,0 +1,152 @@
+"""ShardedStreamRegistry — N hash-sharded single-lock registries.
+
+At the paper's 200k-source scale one dict behind one lock makes every
+picker tick a global stop-the-world: pick_due pops from a 200k-entry
+heap while markers and adders queue on the same lock.  Sharding by
+``sid % shards`` gives each shard its own lock, dict, due-heap, and
+in-process index, so:
+
+  * pick_due round-robins the shards (the start shard rotates per call,
+    so no shard's due streams starve behind another's), popping from
+    heaps that are shards-times smaller — O(k log(n/shards));
+  * requeue_expired and heap compaction are per-shard and bounded;
+  * writers (mark_processed / add / remove) on different shards never
+    contend.
+
+Pick results are deterministic for a fixed (sources, call-sequence)
+input: sid allocation, shard assignment, and the round-robin rotation
+are all pure functions of the call history.
+
+``snapshot``/``restore`` speak the exact single-registry format (plus a
+``shards`` hint), so checkpoints move freely between
+``StreamRegistry`` and ``ShardedStreamRegistry`` in both directions.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Optional
+
+from repro.core.registry import (
+    StreamRegistry,
+    StreamSource,
+    source_from_snapshot,
+)
+
+
+class ShardedStreamRegistry:
+    def __init__(self, shards: int = 8, lease_s: float = 600.0):
+        if shards < 1:
+            raise ValueError("shards must be >= 1")
+        self.shards: List[StreamRegistry] = [
+            StreamRegistry(lease_s=lease_s) for _ in range(shards)]
+        self.lease_s = lease_s
+        self._sid_lock = threading.Lock()   # guards _next_sid and _rr
+        self._next_sid = 0
+        self._rr = 0                      # round-robin start shard
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    def _shard(self, sid: int) -> StreamRegistry:
+        return self.shards[sid % len(self.shards)]
+
+    # ---- source management -------------------------------------------------
+    def add_source(self, channel: str, *, url: str = "",
+                   interval_s: float = 300.0, priority: int = 1,
+                   first_due: float = 0.0, seed: int = 0,
+                   connector: str = "sim") -> int:
+        with self._sid_lock:
+            sid = self._next_sid
+            self._next_sid += 1
+        src = StreamSource(sid, channel, url, interval_s, priority,
+                           next_due=first_due, seed=seed or sid,
+                           connector=connector)
+        self._shard(sid).insert(src)
+        return sid
+
+    def remove_source(self, sid: int) -> bool:
+        return self._shard(sid).remove_source(sid)
+
+    def get(self, sid: int) -> Optional[StreamSource]:
+        return self._shard(sid).get(sid)
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    def pause(self, sid: int) -> bool:
+        return self._shard(sid).pause(sid)
+
+    def resume(self, sid: int) -> bool:
+        return self._shard(sid).resume(sid)
+
+    def release(self, sid: int) -> None:
+        self._shard(sid).release(sid)
+
+    # ---- StreamsPickerActor ------------------------------------------------
+    def pick_due(self, now: float, limit: int = 10_000) -> List[StreamSource]:
+        """Round-robin the shards from a rotating start, each shard
+        contributing under its OWN lock — no global critical section."""
+        n = len(self.shards)
+        with self._sid_lock:              # atomic rotate: concurrent
+            start = self._rr              # pickers start on distinct
+            self._rr = (start + 1) % n    # shards instead of colliding
+        out: List[StreamSource] = []
+        for i in range(n):
+            if len(out) >= limit:
+                break
+            out.extend(self.shards[(start + i) % n].pick_due(
+                now, limit - len(out)))
+        return out
+
+    def requeue_expired(self, now: float) -> int:
+        return sum(s.requeue_expired(now) for s in self.shards)
+
+    # ---- StreamsUpdaterActor -----------------------------------------------
+    def mark_processed(self, sid: int, now: float, *,
+                       etag: Optional[str] = None,
+                       last_modified: Optional[float] = None,
+                       position: Optional[int] = None) -> None:
+        self._shard(sid).mark_processed(sid, now, etag=etag,
+                                        last_modified=last_modified,
+                                        position=position)
+
+    def mark_failed(self, sid: int, now: float, *, backoff: float = 2.0) -> None:
+        self._shard(sid).mark_failed(sid, now, backoff=backoff)
+
+    def prioritize(self, sid: int, now: float) -> None:
+        self._shard(sid).prioritize(sid, now)
+
+    def describe(self) -> List[dict]:
+        out: List[dict] = []
+        for shard in self.shards:
+            out.extend(shard.describe())
+        out.sort(key=lambda d: d["sid"])
+        return out
+
+    # ---- persistence -------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Single-registry format (sources sorted by sid for stable
+        diffs) + a ``shards`` hint old readers ignore."""
+        sources: List[dict] = []
+        for shard in self.shards:
+            sources.extend(shard.snapshot()["sources"])
+        sources.sort(key=lambda d: d["sid"])
+        with self._sid_lock:
+            next_sid = self._next_sid
+        return {"lease_s": self.lease_s, "next_sid": next_sid,
+                "shards": len(self.shards), "sources": sources}
+
+    @classmethod
+    def restore(cls, snap: dict, *,
+                shards: Optional[int] = None) -> "ShardedStreamRegistry":
+        """Accepts either format: its own snapshots or plain
+        ``StreamRegistry`` ones (``shards`` then defaults to 8 unless
+        given).  In-process leases revert to IDLE -> at-least-once
+        re-pick, same as the single registry."""
+        n = shards if shards is not None else snap.get("shards", 8)
+        reg = cls(shards=n, lease_s=snap["lease_s"])
+        reg._next_sid = snap["next_sid"]
+        for d in snap["sources"]:
+            reg._shard(d["sid"]).insert(source_from_snapshot(d))
+        return reg

@@ -49,12 +49,17 @@ def _bucket(n: int, mult: int = 16) -> int:
 class ServeEngine:
     def __init__(self, model: BaseModel, params, cfg: ServeConfig,
                  *, eos_id: int = 2, clock: Callable[[], float] = time.monotonic,
-                 analytics=None, store=None):
+                 analytics=None, store=None, ingest=None):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.eos_id = eos_id
         self.clock = clock
+        # optional ingestion plane (an AlertMixPipeline or anything with
+        # its control API): the serving tier re-exposes the runtime
+        # control surface so operators manage sources/channels through
+        # the same front door that serves inference
+        self.ingest = ingest
         # optional repro.store.StorePlane: journals this engine's dead
         # letters durably and exposes replay_status()
         self.store = store
@@ -253,6 +258,59 @@ class ServeEngine:
         if self.store is None:
             return {"enabled": False}
         return {"enabled": True, **self.store.replay.status()}
+
+    # ---- ingestion control surface (repro.ingest) ---------------------------
+    # The serving tier is the operator's front door: when an ingestion
+    # plane is attached (``ingest=``), the pipeline's runtime control API
+    # is re-exposed here verbatim.
+
+    def _require_ingest(self):
+        if self.ingest is None:
+            raise RuntimeError(
+                "no ingestion plane attached: construct with "
+                "ServeEngine(..., ingest=<AlertMixPipeline>)")
+        return self.ingest
+
+    def add_source(self, channel: str, **kwargs) -> int:
+        return self._require_ingest().add_source(channel, **kwargs)
+
+    def remove_source(self, sid: int) -> bool:
+        return self._require_ingest().remove_source(sid)
+
+    def pause(self, sid: int) -> bool:
+        return self._require_ingest().pause(sid)
+
+    def resume(self, sid: int) -> bool:
+        return self._require_ingest().resume(sid)
+
+    def register_channel(self, name: str) -> bool:
+        return self._require_ingest().register_channel(name)
+
+    def register_connector(self, connector, name=None) -> str:
+        return self._require_ingest().register_connector(connector, name)
+
+    def list_sources(self, *, channel=None) -> List[dict]:
+        return self._require_ingest().list_sources(channel=channel)
+
+    def push(self, sid: int, docs: list) -> int:
+        return self._require_ingest().push(sid, docs)
+
+    def ingest_status(self) -> dict:
+        """One operator view of the attached ingestion plane: channels,
+        connectors, source count, and scheduler counters."""
+        if self.ingest is None:
+            return {"enabled": False}
+        p = self.ingest
+        return {
+            "enabled": True,
+            "channels": list(p.channels()),
+            "connectors": list(p.connectors.names()),
+            "sources": len(p.registry),
+            "registry_shards": getattr(p.registry, "num_shards", 1),
+            "picked_total": p.scheduler.picked_total,
+            "requeued_total": p.scheduler.requeued_total,
+            "unroutable": p.distributor.unroutable,
+        }
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):

@@ -78,6 +78,65 @@ def test_incremental_add_remove():
     assert len(picked) == 9
 
 
+def test_lease_lifecycle_full_cycle():
+    """The whole at-least-once lease state machine, step by step:
+    pick (IDLE -> IN_PROCESS + lease) -> lease expiry -> requeue_expired
+    (back to IDLE, re-heaped) -> re-pick with a FRESH lease."""
+    reg = StreamRegistry(lease_s=60.0)
+    sid = reg.add_source("news", first_due=0.0)
+    assert reg.get(sid).status is StreamStatus.IDLE
+
+    picked = reg.pick_due(now=0.0)
+    assert [s.sid for s in picked] == [sid]
+    src = reg.get(sid)
+    assert src.status is StreamStatus.IN_PROCESS and src.lease_until == 60.0
+
+    # lease still live: invisible to the picker AND to requeue
+    assert reg.pick_due(now=59.0) == []
+    assert reg.requeue_expired(now=59.0) == 0
+
+    # lease expired: requeue flips it back to IDLE on the due heap
+    assert reg.requeue_expired(now=61.0) == 1
+    assert reg.get(sid).status is StreamStatus.IDLE
+
+    # re-pick grants a fresh lease from the new now (at-least-once: the
+    # stream is processed again, never lost)
+    repicked = reg.pick_due(now=61.0)
+    assert [s.sid for s in repicked] == [sid]
+    assert reg.get(sid).lease_until == 121.0
+
+
+def test_snapshot_while_in_process_reverts_leases_to_idle():
+    """A snapshot taken mid-lease restores with every lease revoked: the
+    holder is gone, so restored streams are IDLE and immediately
+    re-pickable (at-least-once across restarts)."""
+    reg = StreamRegistry(lease_s=600.0)
+    sids = [reg.add_source("news", first_due=0.0) for _ in range(6)]
+    assert len(reg.pick_due(now=1.0, limit=4)) == 4   # 4 leases in flight
+
+    reg2 = StreamRegistry.restore(reg.snapshot())
+    for sid in sids:
+        assert reg2.get(sid).status is StreamStatus.IDLE
+    assert {s.sid for s in reg2.pick_due(now=1.0)} == set(sids)
+
+
+def test_remove_source_churn_bounds_heap_garbage():
+    """Long-lived registries with add/remove churn must not grow the lazy
+    heap forever: remove_source compacts once stale entries exceed ~2x
+    the live source count."""
+    reg = StreamRegistry()
+    keep = [reg.add_source("news", first_due=0.0) for _ in range(10)]
+    for _ in range(40):                      # churn: 400 adds + removes
+        batch = [reg.add_source("news", first_due=0.0) for _ in range(10)]
+        for sid in batch:
+            reg.remove_source(sid)
+    live = len(reg)
+    assert live == 10
+    assert len(reg._heap) <= 3 * live + 16   # bounded, not ~400
+    # and the survivors are all still pickable
+    assert {s.sid for s in reg.pick_due(now=5.0)} == set(keep)
+
+
 def test_registry_snapshot_restore_roundtrip():
     reg = StreamRegistry()
     for i in range(5):
