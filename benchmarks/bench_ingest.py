@@ -11,6 +11,11 @@ registry and the connector fan-in the pipeline now rides.
                         populated registry (requeue + pick + distribute)
   connector fan-in      docs/sec through JsonlTailConnector /
                         EventLogConnector / PushConnector push+drain
+  back-pressure         upstream fetch-rate reduction when connectors
+                        send backoff hints (RateLimitedConnector /
+                        FetchResult.backoff_hint_s folded into
+                        next_due): fetches with vs without the limiter
+                        over the same virtual hour
 
 Writes machine-readable results to ``BENCH_ingest.json`` (CI uploads it
 as an artifact so trajectories accumulate across commits).
@@ -39,6 +44,7 @@ from repro.ingest import (
     EventLogConnector,
     JsonlTailConnector,
     PushConnector,
+    RateLimitedConnector,
     ShardedStreamRegistry,
 )
 
@@ -157,6 +163,46 @@ def bench_connector_fan_in(n_docs: int) -> dict:
         shutil.rmtree(d, ignore_errors=True)
 
 
+def bench_backpressure(n_sources: int, virtual_s: float,
+                       min_interval_s: float = 600.0) -> dict:
+    """Upstream fetch-rate with and without connector back-pressure:
+    the same hot sources (60s interval) polled raw vs behind a
+    RateLimitedConnector whose backoff hints the registry folds into
+    next_due.  The ratio is upstream load shed by flow control."""
+    from repro.core import AlertMixPipeline, PipelineConfig
+
+    class _Counting:
+        name = "hot"
+
+        def __init__(self):
+            self.fetches = 0
+
+        def fetch(self, source, cursor, now):
+            self.fetches += 1
+            from repro.core.sources import NOT_MODIFIED, FetchResult
+            return FetchResult(NOT_MODIFIED, etag="e",
+                               position=cursor.position)
+
+    def run(limited: bool) -> int:
+        conn = _Counting()
+        p = AlertMixPipeline(PipelineConfig(num_sources=0,
+                                            pick_interval_s=5.0), seed=0)
+        name = p.register_connector(
+            RateLimitedConnector(conn, min_interval_s=min_interval_s)
+            if limited else conn, "hot")
+        for _ in range(n_sources):
+            p.add_source("news", interval_s=60.0, connector=name)
+        p.run_for(virtual_s, dt=5.0)
+        return conn.fetches
+
+    raw = run(limited=False)
+    limited = run(limited=True)
+    return {"fetches_raw": raw, "fetches_limited": limited,
+            "reduction_factor": raw / max(1, limited),
+            "sources": n_sources, "virtual_s": virtual_s,
+            "min_interval_s": min_interval_s}
+
+
 def main(rows, *, smoke: bool = False):
     shard_counts = (1, 8, 64)
     source_counts = (5_000,) if smoke else (10_000, 200_000)
@@ -208,13 +254,29 @@ def main(rows, *, smoke: bool = False):
                (fan_in["jsonl_docs_s"], fan_in["eventlog_docs_s"],
                 fan_in["push_docs_s"]))
 
+    bp = bench_backpressure(50 if smoke else 500, 3600.0)
+    rows.append((
+        "ingest_backpressure",
+        bp["reduction_factor"],
+        f"fetches/h raw={bp['fetches_raw']} "
+        f"limited={bp['fetches_limited']} "
+        f"(x{bp['reduction_factor']:.1f} load shed, "
+        f"min_interval={bp['min_interval_s']:.0f}s)",
+    ))
+    # JSON before the assert: a failing run must still leave evidence
+    # for CI's always() artifact upload
     with open("BENCH_ingest.json", "w", encoding="utf-8") as fh:
         json.dump({"pick_mark_ops_s": pick_mark,
                    "speedup_8_shards_vs_single_lock": speedup8,
                    "speedup_64_shards_vs_single_lock": speedup64,
                    "scheduler_tick": tick,
                    "connector_fan_in": fan_in,
+                   "backpressure": bp,
                    "sources_top": n_top, "smoke": smoke}, fh, indent=2)
+
+    # deterministic (virtual clock): a 600s limiter on 60s sources must
+    # shed most of the upstream load
+    assert bp["reduction_factor"] > 5.0, bp
     return rows
 
 

@@ -43,6 +43,14 @@ def main() -> None:
     if len(pipeline.alerts) > 20:
         print(f"  ... and {len(pipeline.alerts) - 20} more")
 
+    # asserted invariants: real traffic flowed, windows closed, at least
+    # one rule fired, and every alert names a rule we registered
+    assert pipeline.metrics.indexed_total > 0
+    assert snap["windows_closed"] > 0
+    assert snap["alerts"]["total"] == len(pipeline.alerts) > 0
+    assert {a.rule for a in pipeline.alerts} <= {r.name for r in rules}
+    print("alert_rules OK")
+
 
 if __name__ == "__main__":
     main()

@@ -69,6 +69,13 @@ def main() -> None:
     with open(jsonl_path) as fh:
         n_lines = sum(1 for _ in fh)
     print(f"jsonl archive holds {n_lines} docs == index {len(index)}")
+
+    # asserted invariants: push saw every fired alert live; both
+    # backends hold the complete document set with zero lag
+    assert live_count[0] == len(pipeline.alerts) > 0
+    assert n_lines == len(index) == pipeline.metrics.indexed_total > 0
+    assert all(b["lag"] == 0 and b["healthy"]
+               for b in d["backends"].values())
     print("alert_streaming OK")
 
 

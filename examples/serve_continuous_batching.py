@@ -1,11 +1,25 @@
 """End-to-end serving driver: a small model serving batched requests with
 continuous batching + priority admission (the FeedRouter pull logic).
 
+Demonstrates the production serve path (``repro.launch.serve``): 24
+requests (25% priority) admitted under the replenish rules into a
+6-slot decode batch, prefilled via the length-bucketed compile cache,
+decoded in lockstep.
+
   PYTHONPATH=src python examples/serve_continuous_batching.py
 """
 from repro.launch.serve import main as serve_main
 
+
+def main() -> None:
+    done = serve_main(["--arch", "qwen2.5-3b", "--requests", "24",
+                       "--max-batch", "6", "--max-new", "12",
+                       "--priority-frac", "0.25"])
+    # asserted invariant: every submitted request completed with output
+    assert len(done) == 24
+    assert all(r.output_tokens and r.finished_at is not None for r in done)
+    print("serve_continuous_batching OK")
+
+
 if __name__ == "__main__":
-    serve_main(["--arch", "qwen2.5-3b", "--requests", "24",
-                "--max-batch", "6", "--max-new", "12",
-                "--priority-frac", "0.25"])
+    main()

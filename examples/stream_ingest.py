@@ -64,6 +64,15 @@ def main():
 
     hits = sink.search("market")
     print(f"index search 'market': {len(hits)} docs; total indexed {len(sink)}")
+
+    # asserted invariants: the control API really changed the running
+    # system — removed source gone, webhook doc indexed, channel opened,
+    # and the index holds exactly what the pipeline accepted
+    assert p.registry.get(17) is None            # removed on the fly
+    assert p.registry.get(sid) is not None       # breaking-news source live
+    assert "webhooks" in p.channels()            # runtime-registered channel
+    assert p.metrics.indexed_total == len(sink) > 0
+    assert len(hits) > 0
     print("stream_ingest OK")
 
 

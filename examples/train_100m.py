@@ -46,7 +46,7 @@ def main():
     orig = T.get_arch
     T.get_arch = lambda name: _Spec if name == "lm-100m" else orig(name)
     try:
-        T.main([
+        losses = T.main([
             "--arch", "lm-100m", "--steps", str(args.steps),
             "--batch", str(args.batch), "--seq", str(args.seq),
             "--num-sources", "512",
@@ -55,6 +55,13 @@ def main():
         ] + (["--resume"] if args.resume else []))
     finally:
         T.get_arch = orig
+
+    # asserted invariant: the run produced the requested number of
+    # finite losses (fewer only when --resume skips completed steps)
+    import math
+    assert losses and (args.resume or len(losses) == args.steps)
+    assert all(math.isfinite(l) for l in losses)
+    print("train_100m OK")
 
 
 if __name__ == "__main__":

@@ -45,17 +45,29 @@ an operation, not a redeploy.
 Delivery (repro.delivery) — every producer's single egress:
 
   AlertMixPipeline._work emits accepted documents through ONE
-  BatchingSink -> FanOutSink -> per-backend RetryingSink stack; the
-  terminal sinks (repro.core.sinks: IndexSink / JsonlSink / TokenSink)
-  implement the Sink protocol (emit(batch)/flush()/close() + health +
-  counters; the old index() surface is retired — a DeprecationWarning
-  stub survives one more release).  Failed backends retry with
-  exponential backoff and dead-letter after N attempts;
-  Metrics.delivery surfaces emitted/retried/dead_lettered/lag per
-  backend.  Alerts flow through the same layer (AlertSink fans out to a
-  log + a SubscriptionHub) so consumers subscribe — push callbacks,
-  bounded iterators, or the long-poll wait(timeout) — instead of
-  polling.
+  BatchingSink -> FanOutSink -> per-backend RetryingSink stack; with
+  PipelineConfig.delivery_dispatch each retry envelope additionally
+  rides its own dispatcher thread behind a bounded hand-off queue
+  (DispatchingSink), so a stalled backend inflates only its own queue
+  depth and lag, never its siblings' emit latency or the worker loop.
+  The terminal sinks (repro.core.sinks: IndexSink / JsonlSink /
+  TokenSink) implement the Sink protocol (emit(batch)/flush()/close() +
+  health + counters; the old index() surface is retired — a
+  DeprecationWarning stub survives one more release).  Failed backends
+  retry with exponential backoff and dead-letter after N attempts;
+  hand-off overflow dead-letters under dispatch_overflow:<backend>;
+  Metrics.delivery surfaces emitted/retried/dead_lettered/lag (+ queue
+  depth and hand-off p99 under dispatch) per backend.  Alerts flow
+  through the same layer (AlertSink fans out to a log + a
+  SubscriptionHub) so consumers subscribe — push callbacks, bounded
+  iterators, or the long-poll wait(timeout) — instead of polling.
+
+Ingress back-pressure (repro.ingest): any FetchResult may carry
+backoff_hint_s (the HTTP 429 / Retry-After analogue); the registry
+folds it into next_due as max(interval, hint), so polled connectors
+slow a hot upstream instead of hammering it (RateLimitedConnector is
+the client-side limiter built on the same signal).  Per-connector
+fetch/backoff counters surface in connector_stats() / Metrics.ingest.
 
 Durability plane (repro.store) — nothing absorbed is ever lost:
 

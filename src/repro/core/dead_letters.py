@@ -10,6 +10,10 @@ stay inside it):
   late_event                    event-time older than watermark-lateness
   delivery_failed:<backend>     a delivery backend gave up after retries
                                 (<backend> is the terminal sink's name)
+  dispatch_overflow:<backend>   a backend's bounded hand-off queue was
+                                full (stalled backend, producer faster
+                                than dispatch) or still held records
+                                when close() abandoned a stuck backend
   unknown                       publisher supplied no reason
 
 Durability: the listener itself only counts (``by_reason`` totals + a
@@ -28,7 +32,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 #: static reasons + prefixes of parameterized families, in one place so
 #: tests and docs can't drift from the code
 REASON_FAMILIES = ("mailbox_overflow", "malformed_item", "late_event",
-                   "delivery_failed:", "unknown",
+                   "delivery_failed:", "dispatch_overflow:", "unknown",
                    # ingestion plane (repro.ingest)
                    "connector_error",       # Connector.fetch raised
                    "unknown_connector",     # source names no registered one

@@ -11,8 +11,11 @@
                  source's registered connector) -> redirect handling
                  -> dedup -> enrich
                  -> delivery layer (BatchingSink -> FanOutSink -> one
-                    RetryingSink per backend; repro.delivery);
-                 StreamsUpdater marks processed (cursor advances)
+                    RetryingSink per backend, each optionally on its
+                    own dispatcher thread behind a bounded hand-off
+                    queue — ``delivery_dispatch``; repro.delivery);
+                 StreamsUpdater marks processed (cursor advances,
+                 connector backoff hints fold into next_due)
     -> DeadLettersListener monitors every bounded mailbox AND delivery
        failures (reason="delivery_failed:<backend>")
 
@@ -23,6 +26,20 @@ runtime control API — ``add_source`` / ``remove_source`` / ``pause`` /
 ``list_sources`` / ``push`` — adds, parks, and removes sources and whole
 channels while the system runs (the paper's incremental-flexibility
 claim, now a first-class surface).
+
+Flow control, both directions:
+
+  egress   ``PipelineConfig.delivery_dispatch`` moves every backend onto
+           its own dispatcher thread behind a bounded hand-off queue
+           (repro.delivery.dispatch): a stalled backend inflates only
+           its own queue depth and lag — never its siblings' emit
+           latency, never the worker loop; overflow dead-letters under
+           ``dispatch_overflow:<backend>``.
+  ingress  connectors return ``FetchResult.backoff_hint_s`` (HTTP 429 /
+           Retry-After analogue); the registry folds it into next_due
+           so polled sources slow a hot upstream instead of hammering
+           it.  Per-connector fetch/backoff counters surface in
+           ``connector_stats()`` / ``Metrics.ingest``.
 
 Durability plane (``PipelineConfig.store_dir``; repro.store): accepted
 documents are teed into an append-only checksummed EventLog, every dead
@@ -35,6 +52,7 @@ experiment replays in seconds, or incrementally via ``step``.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -92,6 +110,18 @@ class PipelineConfig:
     delivery_max_delay_s: float = 5.0  # virtual-time bound on buffering
     delivery_retry_attempts: int = 3   # per-backend attempts before DLQ
     delivery_retry_backoff_s: float = 2.0  # first backoff (then x2 each)
+    # flow control (repro.delivery.dispatch): True moves every backend
+    # onto its own dispatcher thread behind a bounded hand-off queue —
+    # one stalled backend inflates only its own queue depth/lag, never
+    # its siblings' emit latency or the worker loop.  False keeps the
+    # seed's serial in-worker delivery, which is fully deterministic
+    # under the virtual clock (retries/health flips land at exact
+    # virtual times) — the right mode for replaying experiments.
+    delivery_dispatch: bool = False
+    dispatch_capacity: int = 256       # hand-off queue bound (batches)
+    dispatch_flush_deadline_s: float = 10.0  # wall-clock drain bound on
+                                       # flush/close (stalled backends
+                                       # cannot wedge the producer)
     # ---- durability plane (repro.store) ------------------------------------
     store_dir: Optional[str] = None    # mount the durable log/journal plane
     segment_bytes: int = 1 << 20       # event-log segment roll size
@@ -128,11 +158,16 @@ class Metrics:
     replayed_total: int = 0            # records re-delivered from the journal
     # delivery-layer counters, refreshed at flush_delivery (run_for does
     # this at its cutoff): top-level emitted/pending plus
-    # {backend: emitted/retried/dead_lettered/lag/healthy}
+    # {backend: emitted/retried/dead_lettered/lag/healthy}; with
+    # delivery_dispatch, each backend also reports queue_depth /
+    # handoff_p99_ms / dropped (the flow-control symptoms)
     delivery: dict = field(default_factory=dict)
     # durability-plane counters (repro.store), refreshed with delivery:
     # appended/replayed/pending records + bytes + segments
     store: dict = field(default_factory=dict)
+    # per-connector ingress counters, refreshed with delivery:
+    # {connector: fetches/items/not_modified/errors/backoffs/deferred_s}
+    ingest: dict = field(default_factory=dict)
 
 
 class AlertMixPipeline:
@@ -167,21 +202,36 @@ class AlertMixPipeline:
             capacity=cfg.push_capacity, dead_letters=self.dead_letters))
         self.item_hook = item_hook
         self.metrics = Metrics()
+        # per-connector ingress counters (fetch-rate + back-pressure
+        # observability; workers may run threaded, hence the lock)
+        self._cstats_lock = threading.Lock()
+        self._connector_stats: Dict[str, Dict[str, float]] = {}
 
         # ---- delivery layer: every accepted document flows through ONE
         # FanOutSink; each backend gets its own retry envelope (exponential
         # backoff -> dead letters) and the whole fan-out sits behind a
-        # batching stage flushed by size or virtual time
+        # batching stage flushed by size or virtual time.  With
+        # cfg.delivery_dispatch each retry envelope additionally rides its
+        # own dispatcher thread behind a bounded hand-off queue, so a
+        # stalled backend's latency is isolated too, not just its failures
         self.sinks = list(sinks) if sinks is not None else [IndexSink()]
         backends = []
         for s in self.sinks:
             terminal = as_sink(s)
-            backends.append(RetryingSink(
+            backend = RetryingSink(
                 terminal,
                 max_attempts=cfg.delivery_retry_attempts,
                 backoff_s=cfg.delivery_retry_backoff_s,
                 dead_letters=self.dead_letters,
-                name=terminal.name))       # metrics key by the backend
+                name=terminal.name)        # metrics key by the backend
+            if cfg.delivery_dispatch:
+                from repro.delivery import DispatchingSink
+                backend = DispatchingSink(
+                    backend, capacity=cfg.dispatch_capacity,
+                    flush_deadline_s=cfg.dispatch_flush_deadline_s,
+                    dead_letters=self.dead_letters,
+                    name=terminal.name)    # stable key across modes
+            backends.append(backend)
         self.fan_out = FanOutSink(backends, name="documents")
         if cfg.delivery_batch > 1:
             self.delivery = BatchingSink(
@@ -279,6 +329,7 @@ class AlertMixPipeline:
             res = connector.fetch(src, cursor, self.now)
         except Exception as exc:      # connector fault -> backoff, not crash
             self.metrics.fetch_errors_total += 1
+            self._note_fetch(src.connector, error=True)
             self.dead_letters.publish(
                 {"sid": src.sid, "connector": src.connector,
                  "error": repr(exc)},
@@ -286,10 +337,22 @@ class AlertMixPipeline:
             self.registry.mark_failed(src.sid, self.now)
             return
         self.metrics.fetched_total += 1
+        # back-pressure gauges track what the hint actually DEFERS
+        # beyond the source's own cadence (a hint <= interval_s applies
+        # zero extra delay — max(interval, hint) — and must not read as
+        # phantom back-pressure on the operator surfaces)
+        deferred = None
+        if res.backoff_hint_s is not None:
+            deferred = max(0.0, res.backoff_hint_s - src.interval_s)
+        self._note_fetch(src.connector, items=len(res.items),
+                         not_modified=res.status == NOT_MODIFIED,
+                         deferred_s=deferred)
         if res.status == NOT_MODIFIED:
             self.metrics.not_modified_total += 1
+            # a 429-style hint can ride a NOT_MODIFIED (rate limiter)
             self.registry.mark_processed(src.sid, self.now, etag=res.etag,
-                                         position=res.position)
+                                         position=res.position,
+                                         backoff_hint_s=res.backoff_hint_s)
             return
         if res.redirected_from:
             self.metrics.redirects_total += 1      # follow the hop
@@ -320,9 +383,31 @@ class AlertMixPipeline:
         self.metrics.indexed_total += accepted
         self.registry.mark_processed(
             src.sid, self.now, etag=res.etag, last_modified=res.last_modified,
-            position=res.position)
+            position=res.position, backoff_hint_s=res.backoff_hint_s)
         for r in self.routers:
             r.on_processed()
+
+    def _note_fetch(self, connector: str, *, items: int = 0,
+                    not_modified: bool = False, error: bool = False,
+                    deferred_s: Optional[float] = None) -> None:
+        """Per-connector fetch-rate + back-pressure accounting
+        (``connector_stats()`` live view, ``Metrics.ingest`` snapshot).
+        ``deferred_s`` is the EXTRA delay the hint added on top of the
+        source's interval; only a positive deferral counts as a
+        backoff."""
+        with self._cstats_lock:
+            st = self._connector_stats.setdefault(connector, {
+                "fetches": 0, "items": 0, "not_modified": 0, "errors": 0,
+                "backoffs": 0, "deferred_s": 0.0})
+            st["fetches"] += 1
+            st["items"] += items
+            if not_modified:
+                st["not_modified"] += 1
+            if error:
+                st["errors"] += 1
+            if deferred_s is not None and deferred_s > 0.0:
+                st["backoffs"] += 1
+                st["deferred_s"] += float(deferred_s)
 
     # ---- runtime control API (repro.ingest) --------------------------------
     def register_channel(self, name: str) -> bool:
@@ -482,6 +567,18 @@ class AlertMixPipeline:
             was = self._backend_health.get(name, True)
             self._backend_health[name] = healthy
             if healthy and not was:
+                # the replay engine verifies landing via the TERMINAL
+                # sink's emitted-counter delta; under delivery_dispatch
+                # the backend's dispatcher thread emits to that same
+                # terminal asynchronously, so quiesce it first (queue
+                # drained, dispatcher idle -> this thread is the only
+                # emitter during the replay).  A backend that cannot
+                # drain is not ready to take its backlog anyway — leave
+                # the flip recorded and let a later round replay.
+                drain = getattr(b, "drain", None)
+                if callable(drain) and not drain():
+                    self._backend_health[name] = was   # retry the flip
+                    continue
                 res = self.store.replay.replay_dead_letters(
                     f"delivery_failed:{name}", b,
                     batch=self.cfg.replay_batch)
@@ -521,17 +618,37 @@ class AlertMixPipeline:
             res = self.store.replay.replay_late_events(watermark=self.now)
             self.metrics.alerts_total += res["alerts"]
         self.delivery.flush()
+        if self.store is not None and self.cfg.replay_auto:
+            # a drain can complete a backend's recovery (its first
+            # successful write may happen inside the flush, especially
+            # under delivery_dispatch where delivery is asynchronous) —
+            # observe the flip here too, then drain the replay traffic
+            before = self.metrics.replayed_total
+            self._maybe_replay()
+            if self.metrics.replayed_total != before:
+                self.delivery.flush()
         self.metrics.delivery = self.delivery_stats()
         self.metrics.store = self.store_stats()
+        self.metrics.ingest = self.connector_stats()
+
+    def connector_stats(self) -> dict:
+        """Live per-connector ingress counters: fetches, items,
+        not_modified, errors, and back-pressure (backoffs applied +
+        total deferred seconds).  ``Metrics.ingest`` holds the snapshot
+        taken at the last ``flush_delivery``."""
+        with self._cstats_lock:
+            return {k: dict(v) for k, v in self._connector_stats.items()}
 
     def delivery_stats(self) -> dict:
         """Per-backend delivery counters: emitted (records the terminal
-        sink accepted), retried, dead_lettered, lag, healthy."""
+        sink accepted), retried, dead_lettered, lag, healthy — plus,
+        under ``delivery_dispatch``, the flow-control gauges
+        queue_depth / handoff_p50_ms / handoff_p99_ms / dropped."""
         out = {"emitted": self.delivery.counters.emitted,
                "pending": getattr(self.delivery, "pending", 0),
                "backends": {}}
         for key, st in self.fan_out.backend_stats().items():
-            out["backends"][key] = {
+            entry = {
                 "emitted": st["terminal_emitted"],
                 "retried": st["retried"],
                 "dead_lettered": st["dead_lettered"],
@@ -539,6 +656,11 @@ class AlertMixPipeline:
                 "lag": st["lag"],
                 "healthy": st["healthy"],
             }
+            if "queue_depth" in st:        # dispatching backend
+                for k in ("queue_depth", "dropped",
+                          "handoff_p50_ms", "handoff_p99_ms"):
+                    entry[k] = st[k]
+            out["backends"][key] = entry
         return out
 
     @property

@@ -229,7 +229,12 @@ class StreamRegistry:
     # ---- StreamsUpdaterActor -----------------------------------------------
     def mark_processed(self, sid: int, now: float, *, etag: Optional[str] = None,
                        last_modified: Optional[float] = None,
-                       position: Optional[int] = None) -> None:
+                       position: Optional[int] = None,
+                       backoff_hint_s: Optional[float] = None) -> None:
+        """Complete a cycle.  ``backoff_hint_s`` is the connector's
+        Retry-After analogue: the next fetch is deferred by
+        ``max(interval_s, hint)`` — upstream back-pressure can only slow
+        a source down, never speed it past its configured cadence."""
         with self._lock:
             src = self._sources.get(sid)
             if src is None:
@@ -243,7 +248,10 @@ class StreamRegistry:
                 src.last_modified = last_modified
             if position is not None:
                 src.position = position
-            src.next_due = now + src.interval_s
+            delay = src.interval_s
+            if backoff_hint_s is not None:
+                delay = max(delay, backoff_hint_s)
+            src.next_due = now + delay
             if not src.paused:
                 heapq.heappush(self._heap, (src.next_due, sid))
 

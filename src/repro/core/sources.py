@@ -47,6 +47,12 @@ class FetchResult:
     last_modified: Optional[float] = None
     redirected_from: Optional[str] = None
     position: Optional[int] = None    # cursor advance for tailing connectors
+    # ingress back-pressure (HTTP 429 / Retry-After analogue): don't
+    # fetch this source again for at least this many seconds.  The
+    # registry folds it into next_due (max with the source's interval),
+    # so a hot or throttling upstream slows its own poll cadence instead
+    # of being hammered.
+    backoff_hint_s: Optional[float] = None
 
 
 class SourceSimulator:

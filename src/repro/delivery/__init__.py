@@ -10,13 +10,22 @@ abstraction instead of three ad-hoc surfaces:
   BatchingSink      size- and virtual-time-based flush    (wrappers.py)
   RetryingSink      exponential backoff, dead-letters after N attempts
   FanOutSink        N backends, per-backend failure isolation + lag
+  DispatchingSink   a backend on its own dispatcher thread behind a
+                    bounded hand-off queue — latency isolation: one
+                    stalled backend inflates only its own queue depth
+                    and lag, never its siblings' emit latency or the
+                    worker loop; overflow dead-letters under
+                    ``dispatch_overflow:<backend>``       (dispatch.py)
   SubscriptionHub   push subscriptions: callbacks + bounded-buffer
                     iterators with per-rule backpressure  (hub.py)
 
 Producers (``AlertMixPipeline._work``, ``RuleEngine`` via ``AlertSink``,
 ``ServeEngine``) all emit through this layer; terminal sinks live where
 their data does (``repro.core.sinks`` for documents/tokens, the alert
-log inside ``repro.alerts.rules``).
+log inside ``repro.alerts.rules``).  The pipeline stacks either
+serially (deterministic virtual-clock replay) or with per-backend
+dispatchers (``PipelineConfig.delivery_dispatch`` /
+``FanOutSink.dispatching``) for production latency isolation.
 """
 from repro.delivery.base import (
     CollectingSink,
@@ -26,11 +35,12 @@ from repro.delivery.base import (
     SinkCounters,
     as_sink,
 )
+from repro.delivery.dispatch import DispatchingSink
 from repro.delivery.hub import Subscription, SubscriptionHub
 from repro.delivery.wrappers import BatchingSink, FanOutSink, RetryingSink
 
 __all__ = [
-    "BatchingSink", "CollectingSink", "FanOutSink", "LegacySinkAdapter",
-    "RetryingSink", "Sink", "SinkClosedError", "SinkCounters",
-    "Subscription", "SubscriptionHub", "as_sink",
+    "BatchingSink", "CollectingSink", "DispatchingSink", "FanOutSink",
+    "LegacySinkAdapter", "RetryingSink", "Sink", "SinkClosedError",
+    "SinkCounters", "Subscription", "SubscriptionHub", "as_sink",
 ]

@@ -12,8 +12,9 @@ packing) implements one contract:
 plus per-sink observability baked into the base class: ``counters``
 (emitted/batches/errors/retried/dead_lettered/flushes) and ``health()``
 (healthy flag, consecutive failures, last error).  Wrappers
-(``repro.delivery.wrappers``) compose behaviour — batching, retry with
-backoff, fan-out — without the terminal sinks knowing.
+(``repro.delivery.wrappers``, ``repro.delivery.dispatch``) compose
+behaviour — batching, retry with backoff, fan-out, per-backend
+dispatcher threads — without the terminal sinks knowing.
 
 Virtual time enters through ``tick(now)``: pass-through on terminal
 sinks, the flush/backoff driver on wrappers.  The pipeline calls it

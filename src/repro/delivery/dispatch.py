@@ -1,0 +1,395 @@
+"""Per-backend dispatcher threads — latency isolation for the fan-out.
+
+``FanOutSink`` gives per-backend FAILURE isolation (one backend raising
+never stops the others), but delivery itself stays serial in the caller:
+a backend that is merely SLOW — a stalled socket, a saturated index —
+inflates every other backend's emit latency and stalls the pipeline
+worker loop.  ``DispatchingSink`` moves a backend onto its own
+dispatcher thread behind a bounded hand-off queue:
+
+  emit(batch)   O(enqueue): never blocks on the backend, never raises on
+                backend failure.  Queue overflow dead-letters the batch
+                under ``dispatch_overflow:<backend>`` instead of
+                blocking the producer — bounded memory, explicit loss.
+  tick(now)     coalesced: the dispatcher applies the latest virtual
+                time before each hand-off, so a wrapped RetryingSink's
+                backoff schedule still runs off the pipeline clock.
+  flush()       enqueues a drain barrier and blocks until every batch
+                queued BEFORE it has been handed to the backend and the
+                backend's own flush has run — or ``flush_deadline_s``
+                of wall time expires (a stalled backend cannot wedge
+                the producer's flush).
+  close()       drain with the same deadline, stop the thread, close the
+                backend.  A backend that cannot drain in time is
+                abandoned: still-queued records are dead-lettered rather
+                than silently dropped, and a merely-slow (not wedged)
+                dispatcher notices the abandonment and closes the
+                backend itself once it catches up — only a thread truly
+                stuck inside ``_write`` stays parked (daemon) until
+                process exit.
+
+Observability: ``queue_depth`` (records accepted but not yet handed
+off), ``dropped`` (records lost to overflow/abandon), and a bounded
+reservoir of hand-off latencies exposed as ``handoff_p50_ms`` /
+``handoff_p99_ms`` — the queue-side symptoms of a lagging backend,
+surfaced per backend in ``Metrics.delivery``.
+
+The canonical parallel stack (``PipelineConfig.delivery_dispatch``):
+
+    BatchingSink( FanOutSink([ DispatchingSink(RetryingSink(b)), ... ]) )
+
+one stalled backend then inflates only its own queue depth and lag,
+not its siblings' emit latency and not the worker loop.
+"""
+from __future__ import annotations
+
+import collections
+import queue as _queue
+import threading
+import time
+from typing import List, Optional
+
+from repro.delivery.base import Sink
+
+_EMIT, _FLUSH, _STOP = "emit", "flush", "stop"
+
+
+class _LatencyReservoir:
+    """Bounded window of the most recent hand-off latencies (seconds)."""
+
+    def __init__(self, cap: int = 2048):
+        self._xs = collections.deque(maxlen=cap)
+        self._lock = threading.Lock()
+
+    def add(self, x: float) -> None:
+        with self._lock:
+            self._xs.append(x)
+
+    def percentile(self, q: float) -> float:
+        with self._lock:
+            xs = sorted(self._xs)
+        if not xs:
+            return 0.0
+        i = min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1))))
+        return xs[i]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._xs)
+
+
+class DispatchingSink(Sink):
+    """Runs ``inner`` on a dedicated dispatcher thread behind a bounded
+    hand-off queue (capacity counted in BATCHES).  ``emit`` is a
+    non-blocking enqueue; see the module docstring for the full
+    contract."""
+
+    def __init__(self, inner: Sink, *, capacity: int = 256,
+                 flush_deadline_s: float = 10.0, dead_letters=None,
+                 name: Optional[str] = None):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        super().__init__(name or f"dispatch({inner.name})")
+        self.inner = inner
+        self.capacity = capacity
+        self.flush_deadline_s = flush_deadline_s
+        self.dead_letters = dead_letters
+        self._q: _queue.Queue = _queue.Queue(maxsize=capacity)
+        self._dlock = threading.Lock()     # dispatch-side counters
+        self._depth_records = 0            # accepted, not yet handed off
+        self._tick_now = 0.0
+        self._tick_applied = 0.0
+        self.dropped = 0                   # records lost (overflow/abandon)
+        self.dispatched_records = 0        # records handed to inner
+        self.dispatched_batches = 0
+        self._handoff = _LatencyReservoir()
+        self._stop_flag = threading.Event()
+        self._thread_exited = threading.Event()
+        self._sweep_lock = threading.Lock()  # serializes residue sweeps
+        self._abandoned = False
+        self._thread = threading.Thread(
+            target=self._run, name=f"dispatch-{self.name}", daemon=True)
+        self._thread.start()
+
+    # ---- producer side -----------------------------------------------------
+    def _write(self, batch: List) -> None:
+        """Non-blocking hand-off.  Never raises on a full queue or a
+        failing backend — that is the latency-isolation contract the
+        worker loop relies on."""
+        try:
+            with self._dlock:
+                self._depth_records += len(batch)
+            self._q.put_nowait((_EMIT, batch, time.perf_counter()))
+        except _queue.Full:
+            with self._dlock:
+                self._depth_records -= len(batch)
+            self._drop(batch)
+            return
+        if self._abandoned or self._thread_exited.is_set():
+            # raced close(): its sweep may already have run, and a
+            # wedged/exited dispatcher will never consume our op — sweep
+            # the residue ourselves (abandon flag and exit event are
+            # both set BEFORE close's sweep, so one of the two sweeps is
+            # guaranteed to see the op; Queue.get hands it to exactly
+            # one of them)
+            if self._abandoned:
+                self._dead_letter_queued()
+            else:
+                self._sweep_residue()
+
+    def _drop(self, batch: List) -> None:
+        with self._dlock:
+            self.dropped += len(batch)
+        with self._lock:
+            self.counters.dead_lettered += len(batch)
+        if self.dead_letters is not None:
+            for record in batch:
+                self.dead_letters.publish(
+                    record, reason=f"dispatch_overflow:{self.inner.name}")
+
+    def tick(self, now: float) -> None:
+        """Coalesced: only the latest virtual time is kept; the
+        dispatcher applies it to ``inner`` before each hand-off and
+        whenever the queue idles."""
+        with self._dlock:
+            self._tick_now = max(self._tick_now, now)
+
+    # ---- dispatcher thread -------------------------------------------------
+    def _apply_tick(self) -> None:
+        with self._dlock:
+            now = self._tick_now
+        if now > self._tick_applied:
+            self._tick_applied = now
+            try:
+                self.inner.tick(now)
+            except Exception:
+                pass                       # a wrapper bug must not kill dispatch
+
+    def _run(self) -> None:
+        try:
+            self._run_loop()
+        finally:
+            self._thread_exited.set()
+
+    def _run_loop(self) -> None:
+        while True:
+            try:
+                op = self._q.get(timeout=0.02)
+            except _queue.Empty:
+                self._apply_tick()
+                if self._abandoned:
+                    # close() gave up on us but we caught up after all:
+                    # the queue is (being) drained by the abandon
+                    # protocol — close the backend ourselves, since only
+                    # this thread may touch it safely
+                    self._close_inner()
+                    return
+                if self._stop_flag.is_set():
+                    return
+                continue
+            if self._abandoned:
+                # hand THIS op to the abandon protocol and exit; close()
+                # drains the rest concurrently (queue ops are consumed
+                # exactly once whichever side gets them)
+                self._give_up(op)
+                self._close_inner()
+                return
+            self._apply_tick()
+            kind = op[0]
+            if kind == _EMIT:
+                _, batch, t_enq = op
+                self._handoff.add(time.perf_counter() - t_enq)
+                try:
+                    self.inner.emit(batch)
+                except Exception:
+                    # a bare (non-RetryingSink) backend raised: take over
+                    # FanOutSink's serial-mode role and dead-letter
+                    with self._lock:
+                        self.counters.dead_lettered += len(batch)
+                    if self.dead_letters is not None:
+                        for record in batch:
+                            self.dead_letters.publish(
+                                record,
+                                reason=f"delivery_failed:{self.inner.name}")
+                else:
+                    with self._dlock:
+                        self.dispatched_records += len(batch)
+                        self.dispatched_batches += 1
+                finally:
+                    with self._dlock:
+                        self._depth_records -= len(batch)
+            elif kind == _FLUSH:
+                try:
+                    self.inner.flush()
+                except Exception:
+                    pass
+                op[1].set()
+            elif kind == _STOP:
+                return
+
+    # ---- drain / lifecycle -------------------------------------------------
+    def drain_begin(self, timeout_s: float = 0.0):
+        """Enqueue a FIFO drain barrier and return its Event WITHOUT
+        waiting (callers draining many backends enqueue all barriers
+        first, then wait on one shared deadline — see
+        ``FanOutSink.drain``).  Returns None when the barrier could not
+        be enqueued within ``timeout_s`` (queue full behind a stalled
+        backend) or the dispatcher thread is gone."""
+        if not self._thread.is_alive():
+            return None
+        barrier = threading.Event()
+        try:
+            self._q.put((_FLUSH, barrier), timeout=timeout_s)
+        except _queue.Full:
+            return None
+        return barrier
+
+    def drain(self, deadline_s: Optional[float] = None) -> bool:
+        """Block until every batch queued before this call has been
+        handed to ``inner`` and ``inner.flush()`` ran (the drain barrier
+        is just another FIFO op), or the wall-clock deadline expires.
+        Returns True when fully drained."""
+        deadline_s = self.flush_deadline_s if deadline_s is None else deadline_s
+        if not self._thread.is_alive():
+            return self._q.empty()
+        t0 = time.perf_counter()
+        barrier = self.drain_begin(deadline_s)
+        if barrier is None:
+            return False
+        remaining = max(0.0, deadline_s - (time.perf_counter() - t0))
+        return barrier.wait(remaining)
+
+    def flush(self) -> None:
+        super().flush()
+        self.drain(self.flush_deadline_s)
+
+    def close(self, deadline_s: Optional[float] = None) -> None:
+        """Drain with deadline, stop the dispatcher, close ``inner``.
+        A backend that cannot drain within the deadline is abandoned:
+        still-queued records dead-letter (``dispatch_overflow``) so they
+        are never silently lost, and the dispatcher — if it is merely
+        slow rather than wedged — closes the backend itself the moment
+        it notices (only the dispatcher thread may touch ``inner``).  A
+        backend truly stuck inside ``_write`` keeps its daemon thread
+        parked until process exit; that is the price of a bounded
+        close.  ``deadline_s`` overrides ``flush_deadline_s`` — callers
+        that already drained (FanOutSink.close) pass a small residual
+        budget so N stalled backends don't serialize N full deadlines."""
+        if self.closed:
+            return
+        deadline_s = self.flush_deadline_s if deadline_s is None else deadline_s
+        self.closed = True                 # reject further emits first
+        with self._lock:
+            self.counters.flushes += 1
+        drained = self.drain(deadline_s)
+        self._stop_flag.set()
+        try:
+            self._q.put_nowait((_STOP,))
+        except _queue.Full:
+            pass                           # idle-poll sees the stop flag
+        self._thread.join(timeout=deadline_s if drained else 0.5)
+        if self._thread.is_alive():
+            self._abandoned = True         # dispatcher cooperates via flag
+            self._dead_letter_queued()
+        else:
+            # a batch raced past the emit/closed guard AFTER the drain
+            # barrier: the dispatcher is gone, so deliver the residue
+            # directly (exclusive access now) before closing the backend
+            self._sweep_residue()
+            self.inner.close()
+
+    def _sweep_residue(self) -> None:
+        """Clean-shutdown sweep (dispatcher thread has EXITED): deliver
+        any op that landed after the drain barrier straight to ``inner``
+        — dead-lettering only if the backend refuses (e.g. already
+        closed by a concurrent sweep) — so the never-silently-lost
+        contract holds on the drained close path too.  The sweep lock
+        serializes the close thread against a racing producer's sweep;
+        the dispatcher itself is guaranteed gone."""
+        with self._sweep_lock:
+            while True:
+                try:
+                    op = self._q.get_nowait()
+                except _queue.Empty:
+                    return
+                if op[0] == _EMIT:
+                    with self._dlock:
+                        self._depth_records -= len(op[1])
+                    try:
+                        self.inner.emit(op[1])
+                    except Exception:
+                        self._drop(op[1])
+                    else:
+                        with self._dlock:
+                            self.dispatched_records += len(op[1])
+                            self.dispatched_batches += 1
+                elif op[0] == _FLUSH:
+                    op[1].set()
+
+    def _close_inner(self) -> None:
+        try:
+            self.inner.close()
+        except Exception:
+            pass                           # best effort on the way out
+
+    def _give_up(self, op) -> None:
+        """Abandon-path handling of a single queue op."""
+        if op[0] == _EMIT:
+            with self._dlock:
+                self._depth_records -= len(op[1])
+            self._drop(op[1])
+        elif op[0] == _FLUSH:
+            op[1].set()                    # release the waiter; not drained
+
+    def _dead_letter_queued(self) -> None:
+        """Abandon path: dead-letter whatever the (stuck or too-slow)
+        dispatcher has not processed.  Runs concurrently with the
+        dispatcher's own abandon check — ``Queue.get`` hands each op to
+        exactly one side."""
+        while True:
+            try:
+                op = self._q.get_nowait()
+            except _queue.Empty:
+                return
+            self._give_up(op)
+
+    # ---- observability -----------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        """Records accepted but not yet handed to the backend."""
+        with self._dlock:
+            return self._depth_records
+
+    @property
+    def healthy(self) -> bool:
+        # like RetryingSink: the envelope reflects the backend it shields
+        return self.inner.healthy
+
+    def health(self) -> dict:
+        h = self.inner.health()
+        h["queue_depth"] = self.queue_depth
+        h["dropped"] = self.dropped
+        return h
+
+    def dispatch_stats(self) -> dict:
+        return {
+            "queue_depth": self.queue_depth,
+            "dropped": self.dropped,
+            "dispatched": self.dispatched_records,
+            "handoff_p50_ms": self._handoff.percentile(50) * 1e3,
+            "handoff_p99_ms": self._handoff.percentile(99) * 1e3,
+            "abandoned": self._abandoned,
+        }
+
+    def stats(self) -> dict:
+        """The wrapped backend's stats (retried / dead_lettered /
+        pending_retry flow through so ``FanOutSink.backend_stats`` and
+        ``Metrics.delivery`` key on backend behaviour, not the
+        envelope's), overlaid with the dispatch-side counters."""
+        st = self.inner.stats()
+        st["name"] = self.name
+        # own dead_lettered covers overflow drops + bare-backend failures
+        st["dead_lettered"] = (st.get("dead_lettered", 0)
+                               + self.counters.dead_lettered)
+        st.update(self.dispatch_stats())
+        return st

@@ -9,9 +9,23 @@ batch upstream once, then deliver to every backend with per-backend
 retry isolation.  All time-driven behaviour (delayed flush, backoff)
 runs off ``tick(now)`` so it replays deterministically under the
 pipeline's virtual clock.
+
+Fan-out runs in two modes:
+
+  serial       ``FanOutSink([...])`` delivers to each backend inline in
+               the caller's thread — deterministic under the virtual
+               clock, but one SLOW backend inflates every sibling's
+               emit latency (failure isolation only).
+  dispatching  ``FanOutSink.dispatching([...])`` puts each backend on
+               its own dispatcher thread behind a bounded hand-off
+               queue (``repro.delivery.dispatch.DispatchingSink``) —
+               emit is O(enqueue) per backend, so a stalled backend
+               inflates only its own queue depth and lag (latency
+               isolation too; ``PipelineConfig.delivery_dispatch``).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -212,12 +226,32 @@ class FanOutSink(Sink):
     to the producer, and its failed records go to dead letters (unless a
     RetryingSink wrapper already absorbed the failure).
 
+    Latency isolation is the backends' job: wrap each one in a
+    ``DispatchingSink`` (or build via :meth:`dispatching`) and this loop
+    degenerates to N bounded enqueues — a stalled backend then delays
+    neither its siblings nor the producer.
+
     Lag metrics: ``lag()`` reports, per backend, how many records the
     fan-out accepted that the backend's TERMINAL sink has not — a
     permanently failing backend shows monotonically growing lag even
     behind a RetryingSink envelope (whose emit never raises), because
     lag is measured at ``backend.terminal``, not at the wrapper.
     """
+
+    @classmethod
+    def dispatching(cls, backends: Sequence[Sink], *, capacity: int = 256,
+                    flush_deadline_s: float = 10.0, dead_letters=None,
+                    name: Optional[str] = None) -> "FanOutSink":
+        """Parallel fan-out: every backend behind its own dispatcher
+        thread + bounded hand-off queue.  Each dispatcher keeps its
+        backend's display name so metrics keys stay stable across the
+        serial/dispatching switch."""
+        from repro.delivery.dispatch import DispatchingSink
+        wrapped = [DispatchingSink(b, capacity=capacity,
+                                   flush_deadline_s=flush_deadline_s,
+                                   dead_letters=dead_letters, name=b.name)
+                   for b in backends]
+        return cls(wrapped, dead_letters=dead_letters, name=name)
 
     def __init__(self, backends: Sequence[Sink], *, dead_letters=None,
                  name: Optional[str] = None):
@@ -239,6 +273,10 @@ class FanOutSink(Sink):
     def _write(self, batch: List) -> None:
         self.offered += len(batch)
         for key, backend in zip(self._keys, self.backends):
+            # a DispatchingSink swallows hand-off overflow (it
+            # dead-letters instead of raising); count only what the
+            # backend actually accepted, not what it dropped
+            dropped_before = getattr(backend, "dropped", None)
             try:
                 backend.emit(batch)
             except Exception:
@@ -248,7 +286,10 @@ class FanOutSink(Sink):
                         self.dead_letters.publish(
                             record, reason=f"delivery_failed:{backend.name}")
             else:
-                self.delivered[key] += len(batch)
+                n = len(batch)
+                if dropped_before is not None:
+                    n -= backend.dropped - dropped_before
+                self.delivered[key] += max(0, n)
 
     def lag(self) -> Dict[str, int]:
         return {k: self.offered - b.terminal.counters.emitted
@@ -266,14 +307,65 @@ class FanOutSink(Sink):
         for b in self.backends:
             b.tick(now)
 
+    def drain(self, deadline_s: Optional[float] = None) -> bool:
+        """Drain every dispatching backend's hand-off queue against ONE
+        shared wall-clock deadline: all drain barriers are enqueued
+        first, then awaited — N stalled backends cost one deadline, not
+        N (serial backends have nothing to drain and are skipped).
+        Returns False when any backend failed to drain in time."""
+        dispatching = [b for b in self.backends
+                       if callable(getattr(b, "drain_begin", None))]
+        if not dispatching:
+            return True
+        if deadline_s is None:
+            deadline_s = max(b.flush_deadline_s for b in dispatching)
+        t0 = time.perf_counter()
+
+        def remaining() -> float:
+            return max(0.0, deadline_s - (time.perf_counter() - t0))
+
+        ok, barriers = True, []
+        for b in dispatching:              # enqueue phase: barriers race
+            ev = b.drain_begin(remaining())
+            if ev is None:
+                ok = False
+            else:
+                barriers.append(ev)
+        for ev in barriers:                # wait phase: shared budget
+            ok = ev.wait(remaining()) and ok
+        return ok
+
     def flush(self) -> None:
+        """Serial backends flush inline; dispatching backends flush via
+        the parallel drain (their ``inner.flush`` runs inside the drain
+        barrier), so one stalled backend costs one deadline — never its
+        siblings' time."""
         super().flush()
+        self.drain()
         for b in self.backends:
-            b.flush()
+            if not callable(getattr(b, "drain_begin", None)):
+                b.flush()
 
     def close(self) -> None:
+        """``super().close()`` flushes (one SHARED drain deadline across
+        all dispatching backends); each dispatching backend then closes
+        with a small residual budget — its queue is already drained or
+        known-stalled, so N stalled backends cost ~one deadline total,
+        not N."""
         if self.closed:
             return
-        super().close()
+        dispatching = [b for b in self.backends
+                       if callable(getattr(b, "drain_begin", None))]
+        budget = max((b.flush_deadline_s for b in dispatching),
+                     default=0.0)
+        t0 = time.perf_counter()           # clock covers the flush too:
+        super().close()                    # flush(): parallel drain
         for b in self.backends:
-            b.close()
+            if b in dispatching:
+                # floor keeps already-drained (healthy) backends from
+                # being abandoned just because a stalled sibling ahead
+                # of them spent the shared budget
+                residual = max(0.25, budget - (time.perf_counter() - t0))
+                b.close(deadline_s=residual)
+            else:
+                b.close()

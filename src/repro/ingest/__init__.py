@@ -13,6 +13,10 @@ is the symmetric redesign for ingress:
                           EventLog (the durability plane as a source)
   PushConnector           push-style ingress (webhooks) with bounded
                           per-source buffers
+  RateLimitedConnector    per-source minimum fetch spacing via
+                          ``FetchResult.backoff_hint_s`` (the HTTP 429 /
+                          Retry-After analogue the registry folds into
+                          next_due — polled-connector back-pressure)
   ConnectorRegistry       name -> connector map the pipeline worker
                           consults per fetch
   ShardedStreamRegistry   N hash-sharded single-lock registries: per-
@@ -31,6 +35,7 @@ from repro.ingest.connectors import (
     EventLogConnector,
     JsonlTailConnector,
     PushConnector,
+    RateLimitedConnector,
     SimulatorConnector,
     as_feed_item,
 )
@@ -43,6 +48,7 @@ __all__ = [
     "EventLogConnector",
     "JsonlTailConnector",
     "PushConnector",
+    "RateLimitedConnector",
     "ShardedStreamRegistry",
     "SimulatorConnector",
     "as_feed_item",

@@ -21,6 +21,16 @@ Shipped connectors:
   PushConnector       push-style ingress (webhooks): callers ``push``
                       documents; the bound source drains them on its
                       next pick ("push")
+  RateLimitedConnector  wraps any connector with a per-source minimum
+                      fetch spacing; early fetches return NOT_MODIFIED
+                      with a ``backoff_hint_s`` the registry folds into
+                      next_due — the client side of HTTP 429/Retry-After
+
+Back-pressure: a connector may set ``FetchResult.backoff_hint_s`` on
+any result; the pipeline worker forwards it to
+``StreamRegistry.mark_processed``, which defers the source's next pick
+by ``max(interval_s, hint)``.  Per-connector fetch/backoff counters
+surface in ``AlertMixPipeline.connector_stats()`` / ``Metrics.ingest``.
 """
 from __future__ import annotations
 
@@ -274,6 +284,67 @@ class PushConnector:
         if not items:
             return FetchResult(NOT_MODIFIED, etag=cursor.etag)
         return FetchResult(OK, items=items, last_modified=now)
+
+
+class RateLimitedConnector:
+    """Wraps any Connector with a per-source minimum fetch spacing — the
+    client side of an upstream's HTTP 429 / Retry-After.  A fetch
+    arriving sooner than ``min_interval_s`` of virtual time after the
+    last real one returns NOT_MODIFIED carrying a ``backoff_hint_s``
+    for the remaining wait, which the registry folds into ``next_due``
+    — so a hot source (or an operator-tightened limit) slows its own
+    poll cadence instead of hammering the upstream.
+
+    The wrapped connector can also set ``backoff_hint_s`` itself (a
+    server-sent Retry-After); the larger of the two hints wins.
+    """
+
+    def __init__(self, inner, *, min_interval_s: float,
+                 name: Optional[str] = None):
+        if min_interval_s <= 0:
+            raise ValueError("min_interval_s must be > 0")
+        self.inner = inner
+        self.min_interval_s = min_interval_s
+        self.name = name or f"ratelimit({inner.name})"
+        self._last_fetch: Dict[int, float] = {}
+        self._lock = threading.Lock()
+        self.throttled = 0                 # fetches answered by the limiter
+
+    def fetch(self, source: StreamSource, cursor: Cursor,
+              now: float) -> FetchResult:
+        with self._lock:
+            last = self._last_fetch.get(source.sid)
+            if last is not None and now - last < self.min_interval_s:
+                self.throttled += 1
+                remaining = self.min_interval_s - (now - last)
+                return FetchResult(NOT_MODIFIED, etag=cursor.etag,
+                                   position=cursor.position,
+                                   backoff_hint_s=remaining)
+        # spacing is recorded only AFTER a successful inner fetch: a
+        # raising upstream must keep raising through the limiter, so the
+        # worker's mark_failed exponential backoff escalates instead of
+        # being masked by throttle answers (which look like successful
+        # NOT_MODIFIED cycles and would reset fail_count)
+        res = self.inner.fetch(source, cursor, now)
+        with self._lock:
+            self._last_fetch[source.sid] = now
+        res.backoff_hint_s = max(res.backoff_hint_s or 0.0,
+                                 self.min_interval_s)
+        return res
+
+    def discard(self, sid: int) -> int:
+        """Drop per-source limiter state — ``remove_source`` calls this
+        so churned sources don't grow ``_last_fetch`` forever (sids are
+        never reused).  Forwards to the wrapped connector's own discard
+        when it has one (e.g. a rate-limited PushConnector)."""
+        n = 0
+        with self._lock:
+            if self._last_fetch.pop(sid, None) is not None:
+                n = 1
+        fn = getattr(self.inner, "discard", None)
+        if callable(fn):
+            n += fn(sid)
+        return n
 
 
 class ConnectorRegistry:

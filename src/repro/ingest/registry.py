@@ -106,10 +106,12 @@ class ShardedStreamRegistry:
     def mark_processed(self, sid: int, now: float, *,
                        etag: Optional[str] = None,
                        last_modified: Optional[float] = None,
-                       position: Optional[int] = None) -> None:
+                       position: Optional[int] = None,
+                       backoff_hint_s: Optional[float] = None) -> None:
         self._shard(sid).mark_processed(sid, now, etag=etag,
                                         last_modified=last_modified,
-                                        position=position)
+                                        position=position,
+                                        backoff_hint_s=backoff_hint_s)
 
     def mark_failed(self, sid: int, now: float, *, backoff: float = 2.0) -> None:
         self._shard(sid).mark_failed(sid, now, backoff=backoff)

@@ -297,7 +297,9 @@ class ServeEngine:
 
     def ingest_status(self) -> dict:
         """One operator view of the attached ingestion plane: channels,
-        connectors, source count, and scheduler counters."""
+        connectors, source count, scheduler counters, and per-connector
+        fetch-rate/back-pressure counters (fetches, items, errors,
+        backoffs applied, total deferred seconds)."""
         if self.ingest is None:
             return {"enabled": False}
         p = self.ingest
@@ -310,7 +312,17 @@ class ServeEngine:
             "picked_total": p.scheduler.picked_total,
             "requeued_total": p.scheduler.requeued_total,
             "unroutable": p.distributor.unroutable,
+            "connector_stats": p.connector_stats(),
         }
+
+    def delivery_status(self) -> dict:
+        """The attached pipeline's live delivery counters — per-backend
+        emitted/retried/dead_lettered/lag/health, plus queue depth and
+        hand-off p99 when the flow-controlled dispatch plane
+        (``delivery_dispatch``) is on."""
+        if self.ingest is None:
+            return {"enabled": False}
+        return {"enabled": True, **self.ingest.delivery_stats()}
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):

@@ -1,0 +1,542 @@
+"""Flow-control plane: per-backend dispatcher threads (latency
+isolation, drain-on-close ordering, bounded hand-off overflow ->
+dead letters, virtual-time retries through the dispatcher, pipeline
+equivalence serial vs dispatched) and ingress back-pressure
+(``FetchResult.backoff_hint_s`` deferring next_due in both registry
+forms, the rate-limited connector, per-connector counters)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import AlertMixPipeline, DeadLettersListener, PipelineConfig
+from repro.core.dead_letters import reason_in_taxonomy
+from repro.core.registry import StreamRegistry
+from repro.core.sources import NOT_MODIFIED, OK, FeedItem, FetchResult
+from repro.delivery import (
+    CollectingSink,
+    DispatchingSink,
+    FanOutSink,
+    RetryingSink,
+    Sink,
+)
+from repro.ingest import Cursor, RateLimitedConnector, ShardedStreamRegistry
+
+
+class StalledSink(Sink):
+    """Blocks in _write until released — a permanently wedged backend."""
+
+    def __init__(self, name="stalled"):
+        super().__init__(name)
+        self.entered = threading.Event()
+        self.release = threading.Event()
+        self.records = []
+
+    def _write(self, batch):
+        self.entered.set()
+        self.release.wait()
+        self.records.extend(batch)
+
+
+class FlakySink(Sink):
+    def __init__(self, fail_first=0, name=None):
+        super().__init__(name)
+        self.fail_first = fail_first
+        self.attempts = 0
+        self.records = []
+
+    def _write(self, batch):
+        self.attempts += 1
+        if self.attempts <= self.fail_first:
+            raise IOError("backend down")
+        self.records.extend(batch)
+
+
+# ---------------------------------------------------------------------------
+# DispatchingSink: latency isolation
+# ---------------------------------------------------------------------------
+
+def test_stalled_backend_does_not_block_siblings_or_producer():
+    """One permanently stalled backend: the producer's emits stay
+    O(enqueue) and the healthy backends receive every record, while the
+    stalled backend only grows its own queue depth and lag."""
+    stalled = StalledSink()
+    healthy1, healthy2 = CollectingSink("h1"), CollectingSink("h2")
+    fan = FanOutSink.dispatching(
+        [healthy1, healthy2, stalled], capacity=64, flush_deadline_s=0.5)
+    n = 20
+    t0 = time.perf_counter()
+    for i in range(n):
+        fan.emit([(f"d{i}", i)])
+    producer_s = time.perf_counter() - t0
+    # producer never waited on the stalled backend (a serial fan-out
+    # would block on the very first emit, forever)
+    assert producer_s < 0.5
+    assert stalled.entered.wait(1.0)
+    # healthy dispatchers drain fully; the stalled one times out
+    healthy_backends = fan.backends[:2]
+    for b in healthy_backends:
+        assert b.drain(2.0)
+    assert len(healthy1.records) == len(healthy2.records) == n
+    assert [r[1] for r in healthy1.records] == list(range(n))   # FIFO
+    stalled_b = fan.backends[2]
+    assert not stalled_b.drain(0.1)
+    assert stalled_b.queue_depth > 0
+    assert fan.lag()[stalled_b.name] == n
+    stalled.release.set()                  # let the thread unwedge
+    fan.close()
+
+
+def test_dispatch_producer_latency_bounded_vs_serial():
+    """The quantitative acceptance shape (bench_delivery measures the
+    real numbers): with a slow-but-working backend, dispatched emits
+    must not inherit the per-write stall that serializes serial mode."""
+    class SlowSink(Sink):
+        def _write(self, batch):
+            time.sleep(0.01)
+
+    def emit_p99(fan, n=30):
+        lat = []
+        for i in range(n):
+            t0 = time.perf_counter()
+            fan.emit([(f"d{i}", i)])
+            lat.append(time.perf_counter() - t0)
+        return sorted(lat)[int(0.99 * (len(lat) - 1))]
+
+    serial = FanOutSink([SlowSink("slow"), CollectingSink("h")])
+    p99_serial = emit_p99(serial)
+    dispatched = FanOutSink.dispatching(
+        [SlowSink("slow"), CollectingSink("h")], capacity=128,
+        flush_deadline_s=5.0)
+    p99_dispatch = emit_p99(dispatched)
+    dispatched.flush()
+    dispatched.close()
+    assert p99_serial >= 0.01              # serial pays the stall per emit
+    assert p99_dispatch < p99_serial / 2   # dispatch does not
+
+
+# ---------------------------------------------------------------------------
+# DispatchingSink: drain / close semantics
+# ---------------------------------------------------------------------------
+
+def test_drain_on_close_preserves_order_and_closes_inner():
+    inner = CollectingSink()
+    d = DispatchingSink(inner, capacity=128)
+    for i in range(50):
+        d.emit([(f"r{i}", i)])
+    d.close()
+    assert [r[1] for r in inner.records] == list(range(50))
+    assert inner.closed and d.closed
+    assert not d._thread.is_alive()
+    assert d.dispatch_stats()["dispatched"] == 50
+    from repro.delivery import SinkClosedError
+    with pytest.raises(SinkClosedError):
+        d.emit([("late", 0)])
+
+
+def test_flush_is_a_fifo_barrier():
+    """flush() returns only after every batch queued before it reached
+    the backend AND the backend's own flush ran."""
+    inner = CollectingSink()
+    d = DispatchingSink(inner, capacity=128)
+    for i in range(25):
+        d.emit([(f"r{i}", i)])
+    d.flush()
+    assert len(inner.records) == 25
+    assert inner.counters.flushes >= 1
+    assert d.queue_depth == 0
+    d.close()
+
+
+def test_close_abandons_stuck_backend_within_deadline():
+    """A backend wedged mid-write cannot block close(): after the drain
+    deadline the dispatcher thread is abandoned and still-queued
+    records dead-letter for visibility."""
+    dl = DeadLettersListener()
+    stalled = StalledSink()
+    d = DispatchingSink(stalled, capacity=8, flush_deadline_s=0.2,
+                        dead_letters=dl, name="wedged")
+    d.emit([("a", 1)])
+    assert stalled.entered.wait(1.0)       # batch 1 is stuck in _write
+    d.emit([("b", 2)])
+    d.emit([("c", 3)])
+    t0 = time.perf_counter()
+    d.close()
+    assert time.perf_counter() - t0 < 3.0  # bounded, not forever
+    assert d.dispatch_stats()["abandoned"]
+    # the two queued records were dead-lettered, not silently dropped
+    assert dl.by_reason["dispatch_overflow:stalled"] == 2
+    stalled.release.set()
+
+
+def test_handoff_queue_overflow_dead_letters_with_new_reason():
+    dl = DeadLettersListener()
+    stalled = StalledSink(name="es")
+    d = DispatchingSink(stalled, capacity=2, flush_deadline_s=0.2,
+                        dead_letters=dl, name="es")
+    d.emit([("a", 1)])
+    assert stalled.entered.wait(1.0)       # in-flight; queue now empty
+    d.emit([("b", 2)])
+    d.emit([("c", 3)])                     # queue full at capacity=2
+    d.emit([("d", 4), ("e", 5)])           # overflow: whole batch drops
+    assert d.dropped == 2
+    assert d.counters.dead_lettered == 2
+    assert dl.by_reason["dispatch_overflow:es"] == 2
+    assert reason_in_taxonomy("dispatch_overflow:es")
+    assert not reason_in_taxonomy("dispatch_overflow:")   # parameter required
+    assert d.queue_depth == 3              # 1 in-flight + 2 queued
+    stats = d.stats()
+    assert stats["queue_depth"] == 3 and stats["dropped"] == 2
+    stalled.release.set()
+    d.close()
+
+
+def test_virtual_time_retries_flow_through_dispatcher():
+    """tick(now) coalesces through the dispatcher so a wrapped
+    RetryingSink's backoff schedule still runs on the virtual clock."""
+    dl = DeadLettersListener()
+    flaky = FlakySink(fail_first=1, name="es")
+    d = DispatchingSink(RetryingSink(flaky, max_attempts=3, backoff_s=1.0,
+                                     dead_letters=dl, name="es"),
+                        capacity=16, name="es")
+    d.emit([("a", 1)])
+    deadline = time.perf_counter() + 2.0   # wait for attempt 1 (fails)
+    while flaky.attempts < 1 and time.perf_counter() < deadline:
+        time.sleep(0.01)
+    assert flaky.attempts == 1 and flaky.records == []
+    d.tick(5.0)                            # backoff elapsed (virtual)
+    deadline = time.perf_counter() + 2.0   # idle poll applies the tick
+    while not flaky.records and time.perf_counter() < deadline:
+        time.sleep(0.01)
+    assert flaky.records == [("a", 1)]
+    assert dl.total == 0
+    d.close()
+
+
+def test_dispatch_health_and_terminal_chain():
+    flaky = FlakySink(fail_first=10, name="es")
+    d = DispatchingSink(RetryingSink(flaky, max_attempts=2, name="es"),
+                        name="es")
+    assert d.terminal is flaky             # lag measures at the terminal
+    d.emit([("a", 1)])
+    d.emit([("b", 2)])
+    d.drain(2.0)                           # 2 emits + 2 flush retries fail
+    assert flaky.consecutive_failures >= 3
+    assert not d.healthy                   # proxies the backend's health
+    h = d.health()
+    assert "queue_depth" in h and "dropped" in h
+    d.close()
+
+
+def test_clean_close_residue_is_delivered_not_stranded():
+    """A batch that races past the emit/closed guard and lands in the
+    queue after the drain barrier (dispatcher already exited cleanly)
+    must still be delivered — or dead-lettered — never stranded."""
+    import time as _time
+
+    inner = CollectingSink()
+    d = DispatchingSink(inner, capacity=16)
+    d.emit([("a", 1)])
+    d.close()                              # clean: thread gone, inner open
+    assert d._thread_exited.is_set()
+    # simulate the racing producer's op landing post-sweep, then the
+    # sweep either side would run (here: the producer-side one)
+    d._q.put_nowait(("emit", [("b", 2)], _time.perf_counter()))
+    with d._dlock:
+        d._depth_records += 1
+    d._sweep_residue()
+    # inner is closed by now, so the straggler dead-letters via _drop
+    # (counted) rather than stranding silently
+    assert d.queue_depth == 0
+    assert len(inner.records) + d.dropped == 2
+
+
+def test_fanout_delivered_excludes_overflow_drops():
+    """DispatchingSink swallows hand-off overflow instead of raising;
+    FanOutSink.delivered must count only records actually accepted."""
+    dl = DeadLettersListener()
+    stalled = StalledSink(name="slow")
+    fan = FanOutSink.dispatching([stalled], capacity=1,
+                                 flush_deadline_s=0.2, dead_letters=dl)
+    fan.emit([("a", 1)])
+    assert stalled.entered.wait(1.0)       # in-flight, queue empty
+    fan.emit([("b", 2)])                   # queued (capacity 1)
+    fan.emit([("c", 3), ("d", 4)])         # overflow: dropped, not raised
+    key = fan._keys[0]
+    assert fan.offered == 4
+    assert fan.delivered[key] == 2         # NOT 4: drops excluded
+    assert dl.by_reason["dispatch_overflow:slow"] == 2
+    stalled.release.set()
+    fan.close()
+
+
+def test_fanout_drain_uses_one_shared_deadline():
+    """Two stalled backends cost ONE flush deadline, not one each."""
+    s1, s2 = StalledSink(name="s1"), StalledSink(name="s2")
+    fan = FanOutSink.dispatching([s1, s2, CollectingSink("h")],
+                                 capacity=16, flush_deadline_s=0.4)
+    fan.emit([("a", 1)])
+    assert s1.entered.wait(1.0) and s2.entered.wait(1.0)
+    t0 = time.perf_counter()
+    assert not fan.drain()                 # both wedged: not drained...
+    dt = time.perf_counter() - t0
+    assert dt < 0.75                       # ...within ~one 0.4s budget
+    s1.release.set()
+    s2.release.set()
+    fan.close()
+
+
+def test_fanout_close_bounded_with_multiple_stalled_backends():
+    """close() must cost ~one shared deadline, not one per stalled
+    backend: the flush drains in parallel and each backend's close then
+    gets only a small residual budget."""
+    s1, s2 = StalledSink(name="s1"), StalledSink(name="s2")
+    fan = FanOutSink.dispatching([s1, s2], capacity=16,
+                                 flush_deadline_s=1.0)
+    fan.emit([("a", 1)])
+    assert s1.entered.wait(1.0) and s2.entered.wait(1.0)
+    t0 = time.perf_counter()
+    fan.close()
+    dt = time.perf_counter() - t0
+    # serial per-backend deadlines would be >= 1 + 2*(1 + 0.5) = 4s
+    assert dt < 3.5, dt
+    s1.release.set()
+    s2.release.set()
+
+
+def test_dispatch_mode_outage_recovery_replays_without_duplicates(tmp_path):
+    """The tentpole + durability integration: under delivery_dispatch a
+    backend outage journals its backlog, recovery auto-replays it (the
+    dispatcher is quiesced first so the terminal-delta verification
+    can't race live traffic), and the terminal ends with EXACTLY one
+    copy of each document."""
+    from repro.core.sinks import IndexSink
+
+    class OutageSink(Sink):
+        def __init__(self, name="flaky_es"):
+            super().__init__(name)
+            self.down = False
+            self.records = []
+
+        def _write(self, batch):
+            if self.down:
+                raise IOError("outage")
+            self.records.extend(batch)
+
+    flaky, good = OutageSink(), IndexSink()
+    cfg = PipelineConfig(num_sources=300, feed_interval_s=120.0,
+                         store_dir=str(tmp_path / "store"),
+                         delivery_batch=8, delivery_retry_attempts=2,
+                         delivery_retry_backoff_s=2.0,
+                         delivery_dispatch=True)
+    p = AlertMixPipeline(cfg, seed=2, sinks=[good, flaky])
+    p.run_for(300.0)
+    flaky.down = True
+    p.run_for(600.0)
+    p.flush_delivery()
+    backlog = p.store.journal.pending().get("delivery_failed:flaky_es", 0)
+    assert backlog > 0
+    flaky.down = False
+    p.run_for(600.0)
+    assert p.metrics.replayed_total >= backlog
+    assert p.store.journal.pending().get(
+        "delivery_failed:flaky_es", 0) == 0
+    ids = [i for i, _ in flaky.records]
+    assert set(ids) == set(good._docs)     # converged...
+    assert len(ids) == len(set(ids))       # ...with no duplicate delivery
+    p.close()
+
+
+def test_rate_limiter_does_not_mask_failing_upstream():
+    """A raising inner connector keeps raising through the limiter: no
+    throttle answer may masquerade as a successful cycle and reset the
+    source's mark_failed backoff."""
+    calls = []
+
+    class BrokenUpstream:
+        name = "down"
+
+        def fetch(self, source, cursor, now):
+            calls.append(now)
+            raise IOError("upstream down")
+
+    reg = StreamRegistry()
+    reg.add_source("news")
+    src = reg.get(0)
+    rl = RateLimitedConnector(BrokenUpstream(), min_interval_s=100.0)
+    with pytest.raises(IOError):
+        rl.fetch(src, Cursor(), 0.0)
+    # the failure recorded no spacing: the retry goes UPSTREAM again
+    # (and raises -> mark_failed escalates) instead of being answered
+    # by the limiter as NOT_MODIFIED
+    with pytest.raises(IOError):
+        rl.fetch(src, Cursor(), 10.0)
+    assert calls == [0.0, 10.0] and rl.throttled == 0
+
+
+# ---------------------------------------------------------------------------
+# pipeline: dispatch mode equivalence + flow-control metrics
+# ---------------------------------------------------------------------------
+
+def test_pipeline_dispatch_mode_delivers_identically_to_serial():
+    cfg = dict(num_sources=200, feed_interval_s=120.0, delivery_batch=8)
+    serial_sink, dispatch_sink = CollectingSink(), CollectingSink()
+    ms = AlertMixPipeline(PipelineConfig(**cfg), seed=1,
+                          sinks=[serial_sink]).run_for(1200.0)
+    p = AlertMixPipeline(PipelineConfig(**cfg, delivery_dispatch=True),
+                         seed=1, sinks=[dispatch_sink])
+    md = p.run_for(1200.0)
+    assert md.indexed_total == ms.indexed_total > 0
+    # same records, same per-backend FIFO order
+    assert dispatch_sink.records == serial_sink.records
+    b = md.delivery["backends"]["CollectingSink"]
+    assert b["emitted"] == md.indexed_total and b["lag"] == 0
+    # flow-control gauges surface only in dispatch mode
+    assert "queue_depth" in b and "handoff_p99_ms" in b and "dropped" in b
+    assert b["queue_depth"] == 0 and b["dropped"] == 0
+    assert "queue_depth" not in ms.delivery["backends"]["CollectingSink"]
+
+
+# ---------------------------------------------------------------------------
+# ingress back-pressure: backoff_hint_s -> next_due
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_registry", [
+    lambda: StreamRegistry(lease_s=1000.0),
+    lambda: ShardedStreamRegistry(shards=4, lease_s=1000.0),
+], ids=["single", "sharded"])
+def test_backoff_hint_defers_next_due(make_registry):
+    reg = make_registry()
+    sid = reg.add_source("news", interval_s=60.0, first_due=0.0)
+    [src] = reg.pick_due(0.0)
+    assert src.sid == sid
+    reg.mark_processed(sid, 0.0, backoff_hint_s=500.0)
+    assert reg.pick_due(60.0) == []        # interval alone would re-pick
+    assert reg.pick_due(499.0) == []       # hint still holding
+    assert [s.sid for s in reg.pick_due(500.0)] == [sid]
+    # a hint SMALLER than the interval never speeds a source up
+    reg.mark_processed(sid, 500.0, backoff_hint_s=1.0)
+    assert reg.pick_due(501.0) == []
+    assert [s.sid for s in reg.pick_due(560.0)] == [sid]
+    # and no hint keeps the plain cadence
+    reg.mark_processed(sid, 560.0)
+    assert [s.sid for s in reg.pick_due(620.0)] == [sid]
+
+
+class ThrottlingConnector:
+    """Returns one item per fetch plus a server-sent Retry-After."""
+
+    name = "throttle"
+
+    def __init__(self, retry_after_s: float):
+        self.retry_after_s = retry_after_s
+        self.fetches = 0
+
+    def fetch(self, source, cursor, now):
+        self.fetches += 1
+        item = FeedItem(guid=f"t-{self.fetches}", title="t", body="b",
+                        published_at=now)
+        return FetchResult(OK, items=[item], last_modified=now,
+                           backoff_hint_s=self.retry_after_s)
+
+
+def test_pipeline_honors_connector_backoff_hint():
+    """A connector sending Retry-After=900s on a 60s-interval source is
+    fetched ~once per 900s, not once per 60s — and the per-connector
+    counters expose the applied back-pressure."""
+    conn = ThrottlingConnector(retry_after_s=900.0)
+    p = AlertMixPipeline(PipelineConfig(num_sources=0, pick_interval_s=5.0),
+                         seed=0)
+    p.register_connector(conn)
+    p.add_source("news", interval_s=60.0, connector="throttle")
+    p.run_for(3600.0)
+    # 3600s at hint-cadence 900 -> ~5 fetches; at interval cadence it
+    # would have been ~60
+    assert conn.fetches <= 6
+    st = p.connector_stats()["throttle"]
+    assert st["fetches"] == conn.fetches
+    assert st["backoffs"] == conn.fetches
+    # deferred_s counts only the delay ADDED beyond the 60s interval
+    assert st["deferred_s"] == pytest.approx((900.0 - 60.0) * conn.fetches)
+    assert st["items"] == conn.fetches
+    assert p.metrics.ingest["throttle"] == st   # snapshot at cutoff flush
+
+
+def test_hint_below_interval_is_not_counted_as_backoff():
+    """A hint the registry can't act on (<= interval) must not read as
+    phantom back-pressure in the operator gauges."""
+    class PoliteConnector:
+        name = "polite"
+
+        def fetch(self, source, cursor, now):
+            return FetchResult(NOT_MODIFIED, etag="e",
+                               position=cursor.position,
+                               backoff_hint_s=30.0)   # < interval 600
+
+    p = AlertMixPipeline(PipelineConfig(num_sources=0, pick_interval_s=5.0),
+                         seed=0)
+    p.register_connector(PoliteConnector())
+    p.add_source("news", interval_s=600.0, connector="polite")
+    p.run_for(1800.0)
+    st = p.connector_stats()["polite"]
+    assert st["fetches"] > 0
+    assert st["backoffs"] == 0 and st["deferred_s"] == 0.0
+
+
+def test_rate_limited_connector_spaces_fetches():
+    """Client-side limiter: a 60s-interval source behind a 600s rate
+    limit is really fetched once per 600s; limiter answers in between
+    are NOT_MODIFIED + hint (no items, cursor untouched)."""
+    class CountingConnector:
+        name = "inner"
+
+        def __init__(self):
+            self.fetches = 0
+
+        def fetch(self, source, cursor, now):
+            self.fetches += 1
+            return FetchResult(OK, items=[FeedItem(
+                guid=f"i-{self.fetches}", title="t", body="b",
+                published_at=now)], last_modified=now)
+
+    inner = CountingConnector()
+    limited = RateLimitedConnector(inner, min_interval_s=600.0)
+    p = AlertMixPipeline(PipelineConfig(num_sources=0, pick_interval_s=5.0),
+                         seed=0)
+    p.register_connector(limited, "limited")
+    p.add_source("news", interval_s=60.0, connector="limited")
+    m = p.run_for(3600.0)
+    assert inner.fetches <= 7              # ~1 per 600s, not ~60
+    assert m.indexed_total == inner.fetches
+    st = p.connector_stats()["limited"]
+    assert st["backoffs"] == st["fetches"] > 0
+
+
+def test_rate_limited_connector_unit():
+    reg = StreamRegistry()
+    reg.add_source("news")
+    src = reg.get(0)
+    inner_calls = []
+
+    class Inner:
+        name = "inner"
+
+        def fetch(self, source, cursor, now):
+            inner_calls.append(now)
+            return FetchResult(OK, items=[], last_modified=now)
+
+    rl = RateLimitedConnector(Inner(), min_interval_s=100.0)
+    res = rl.fetch(src, Cursor(), 0.0)
+    assert inner_calls == [0.0]
+    assert res.backoff_hint_s == 100.0     # floor applied to real fetches
+    res = rl.fetch(src, Cursor(), 40.0)    # too soon: throttled
+    assert inner_calls == [0.0] and res.status == NOT_MODIFIED
+    assert res.backoff_hint_s == pytest.approx(60.0)
+    assert rl.throttled == 1
+    res = rl.fetch(src, Cursor(), 100.0)   # spacing satisfied
+    assert inner_calls == [0.0, 100.0]
+    # remove_source's cleanup hook prunes per-source limiter state
+    assert rl.discard(src.sid) == 1
+    assert rl.discard(src.sid) == 0        # idempotent; state is gone
+    with pytest.raises(ValueError):
+        RateLimitedConnector(Inner(), min_interval_s=0.0)
