@@ -90,10 +90,15 @@ def bench_replay_vs_live(n_events: int) -> dict:
     aggs, fired = eng.replay_events(events, watermark=1e9)
     replay_dt = time.perf_counter() - t0
     assert len(fired) == len(stage_live.alerts)   # parity on fired alerts
+    # where the replay gap goes: per-stage shares from the obs-plane
+    # profiler (pack -> kernel -> rules -> state_merge), ROADMAP item 1
+    profile = {stage: round(s["share"], 4)
+               for stage, s in eng.profiler.snapshot().items()}
     return {"live_events_s": len(events) / live_dt,
             "replay_events_s": len(events) / replay_dt,
             "speedup": live_dt / replay_dt,
-            "events": len(events), "aggregates": len(aggs)}
+            "events": len(events), "aggregates": len(aggs),
+            "profile": profile}
 
 
 class _OutageSink(Sink):
@@ -161,7 +166,9 @@ def main(rows, *, smoke: bool = False):
         1e6 / rvl["replay_events_s"],            # us per replayed event
         f"replay={rvl['replay_events_s']:,.0f}ev/s "
         f"live={rvl['live_events_s']:,.0f}ev/s "
-        f"speedup=x{rvl['speedup']:.2f}",
+        f"speedup=x{rvl['speedup']:.2f} "
+        + " ".join(f"{k}={v:.0%}" for k, v in sorted(
+            rvl["profile"].items(), key=lambda kv: -kv[1])),
     ))
     e2e = bench_recovery_drain(200 if smoke else 2_000,
                                600.0 if smoke else 3600.0)

@@ -11,8 +11,13 @@
   bench_delivery  — delivery layer: docs/sec vs fan-out width, flush-
                     batch sweep, alert push latency p50/p99
   bench_store     — durability plane: event-log append/scan MB/s, batch
-                    replay vs live-path events/sec, recovery-to-drain
-                    latency (writes BENCH_store.json)
+                    replay vs live-path events/sec with per-stage
+                    profile shares, recovery-to-drain latency
+                    (writes BENCH_store.json)
+  bench_obs       — observability plane: tracing overhead at sample
+                    rate 1.0 vs off (<=10% asserted), exposition scrape
+                    cost, JSONL span-export rate (writes BENCH_obs.json
+                    + a sample trace in BENCH_obs_trace.jsonl)
   bench_scaling   — source-count scaling + resizer ablation
   bench_serving   — continuous vs static batching (FeedRouter admission)
   bench_train     — CPU train-step throughput per model family
@@ -33,6 +38,7 @@ def main() -> None:
         bench_alerts,
         bench_delivery,
         bench_ingest,
+        bench_obs,
         bench_roofline,
         bench_scaling,
         bench_serving,
@@ -43,8 +49,8 @@ def main() -> None:
     rows: list = []
     failures = 0
     for mod in (bench_alertmix, bench_ingest, bench_alerts, bench_delivery,
-                bench_store, bench_scaling, bench_serving, bench_train,
-                bench_roofline):
+                bench_store, bench_obs, bench_scaling, bench_serving,
+                bench_train, bench_roofline):
         try:
             mod.main(rows)
         except Exception:

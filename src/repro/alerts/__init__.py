@@ -58,6 +58,9 @@ class AnalyticsStage:
         self.value_fn = value_fn or (lambda doc: 1.0)
         self.time_fn = time_fn or (lambda doc: float(doc["published_at"]))
         self.closed_total = 0
+        # optional repro.obs.Tracer: when set, rule evaluation over
+        # closed windows records a rules.eval span (pipeline mounts it)
+        self.tracer = None
 
     def observe(self, doc: dict, *, now: float = 0.0) -> bool:
         return self.operator.observe(
@@ -71,6 +74,12 @@ class AnalyticsStage:
         self.closed_total += len(closed)
         if not closed:
             return []
+        if self.tracer is not None:
+            with self.tracer.span("rules.eval",
+                                  attrs={"windows": len(closed)}) as sp:
+                fired = self.engine.process(closed)
+                sp.set("alerts", len(fired))
+            return fired
         return self.engine.process(closed)
 
     def subscribe(self, callback=None, *, capacity: int = 256, key_fn=None):

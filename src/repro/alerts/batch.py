@@ -44,22 +44,42 @@ def pack_events(events: Sequence[Event], spec: WindowSpec):
     return (np.asarray(vals, np.float32), np.asarray(segs, np.int32), slots)
 
 
+class _NullStage:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        pass
+
+
+_NULL_STAGE = _NullStage()
+
+
 def reduce_events(events: Sequence[Event], spec: WindowSpec, *,
-                  interpret=None) -> List[WindowAggregate]:
-    """One kernel launch -> WindowAggregates for every touched slot."""
+                  interpret=None, profiler=None) -> List[WindowAggregate]:
+    """One kernel launch -> WindowAggregates for every touched slot.
+
+    ``profiler`` (a ``repro.obs.StageProfiler``) itemizes the chain into
+    pack_events / kernel / unpack stages — the breakdown ROADMAP item 1
+    (the replay-vs-live gap) needs."""
     from repro.kernels import ops   # lazy: keep host path jax-free
 
-    values, seg_ids, slots = pack_events(events, spec)
+    stage = profiler.stage if profiler is not None else (
+        lambda name: _NULL_STAGE)
+    with stage("pack_events"):
+        values, seg_ids, slots = pack_events(events, spec)
     if not slots:
         return []
-    lanes = np.asarray(ops.window_reduce(
-        values, seg_ids, len(slots), interpret=interpret))
-    out: List[WindowAggregate] = []
-    for sid, (key, start, end) in enumerate(slots):
-        cnt, sm, sq, mx = lanes[sid]
-        out.append(WindowAggregate(
-            key=key, window_start=start, window_end=end,
-            count=int(round(cnt)), sum=float(sm), sumsq=float(sq),
-            max=float(mx)))
-    out.sort(key=lambda a: (a.window_end, a.key))
+    with stage("kernel"):
+        lanes = np.asarray(ops.window_reduce(
+            values, seg_ids, len(slots), interpret=interpret))
+    with stage("unpack"):
+        out: List[WindowAggregate] = []
+        for sid, (key, start, end) in enumerate(slots):
+            cnt, sm, sq, mx = lanes[sid]
+            out.append(WindowAggregate(
+                key=key, window_start=start, window_end=end,
+                count=int(round(cnt)), sum=float(sm), sumsq=float(sq),
+                max=float(mx)))
+        out.sort(key=lambda a: (a.window_end, a.key))
     return out

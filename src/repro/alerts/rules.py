@@ -122,9 +122,19 @@ class AlertSink:
 
 
 class AlertRule:
-    """Base: subclasses implement ``evaluate(agg) -> Optional[Alert]``."""
+    """Base: subclasses implement ``evaluate(agg) -> Optional[Alert]``.
+
+    ``key_prefix`` scopes a rule to the window keys it should see (the
+    engine skips non-matching aggregates before ``evaluate``): platform
+    health rules set ``key_prefix="__health__."`` so they never fire on
+    product channels, and vice versa a product rule can exclude the
+    health stream by keying on its channel prefix."""
 
     name: str = "rule"
+    key_prefix: Optional[str] = None
+
+    def applies_to(self, key: str) -> bool:
+        return self.key_prefix is None or key.startswith(self.key_prefix)
 
     def evaluate(self, agg: WindowAggregate) -> Optional[Alert]:
         raise NotImplementedError
@@ -140,11 +150,13 @@ class AlertRule:
 
 class ThresholdRule(AlertRule):
     def __init__(self, name: str, metric: str = "count", op: str = ">=",
-                 threshold: float = 0.0, severity: str = "warning"):
+                 threshold: float = 0.0, severity: str = "warning",
+                 key_prefix: Optional[str] = None):
         if op not in _OPS:
             raise ValueError(f"op must be one of {sorted(_OPS)}")
         self.name, self.metric, self.op = name, metric, op
         self.threshold, self.severity = threshold, severity
+        self.key_prefix = key_prefix
 
     def evaluate(self, agg: WindowAggregate) -> Optional[Alert]:
         v = _metric(agg, self.metric)
@@ -169,9 +181,11 @@ class RateOfChangeRule(AlertRule):
     """
 
     def __init__(self, name: str, metric: str = "count", factor: float = 2.0,
-                 min_value: float = 1.0, severity: str = "warning"):
+                 min_value: float = 1.0, severity: str = "warning",
+                 key_prefix: Optional[str] = None):
         self.name, self.metric = name, metric
         self.factor, self.min_value, self.severity = factor, min_value, severity
+        self.key_prefix = key_prefix
         self._prev: Dict[str, float] = {}
         self._last_end: Dict[str, float] = {}
 
@@ -208,9 +222,11 @@ class ZScoreRule(AlertRule):
     history exists when it arrives.)"""
 
     def __init__(self, name: str, metric: str = "count", z: float = 3.0,
-                 min_history: int = 5, severity: str = "critical"):
+                 min_history: int = 5, severity: str = "critical",
+                 key_prefix: Optional[str] = None):
         self.name, self.metric, self.z = name, metric, z
         self.min_history, self.severity = min_history, severity
+        self.key_prefix = key_prefix
         self._hist: Dict[str, Tuple[int, float, float]] = {}  # n, mean, M2
 
     def evaluate(self, agg: WindowAggregate) -> Optional[Alert]:
@@ -247,10 +263,18 @@ class RuleEngine:
         self.sink = sink if sink is not None else AlertSink()
         self.evaluated = 0
 
+    def add_rule(self, rule: AlertRule) -> None:
+        """Mount a rule at runtime (names stay unique)."""
+        if any(r.name == rule.name for r in self.rules):
+            raise ValueError(f"duplicate rule name: {rule.name!r}")
+        self.rules.append(rule)
+
     def process(self, aggregates: List[WindowAggregate]) -> List[Alert]:
         fired: List[Alert] = []
         for agg in aggregates:
             for rule in self.rules:
+                if not rule.applies_to(agg.key):
+                    continue        # scoped out; no state touch either
                 self.evaluated += 1
                 alert = rule.evaluate(agg)
                 if alert is not None:

@@ -52,7 +52,7 @@ experiment replays in seconds, or incrementally via ``step``.
 """
 from __future__ import annotations
 
-import threading
+import collections
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -67,6 +67,7 @@ from repro.core.scheduler import DEFAULT_CHANNELS, ChannelDistributor, Scheduler
 from repro.core.sinks import IndexSink
 from repro.core.sources import NOT_MODIFIED, SourceSimulator
 from repro.delivery import BatchingSink, FanOutSink, RetryingSink, as_sink
+from repro.obs import Observability, TracingSink
 
 # repro.ingest imports repro.core.registry (which runs this package's
 # __init__) — import it lazily to keep `import repro.ingest` first legal
@@ -137,15 +138,41 @@ class PipelineConfig:
                                        # journal's truncation floor, so
                                        # disk is reclaimed; off = late
                                        # backlog kept for manual replay)
+    # ---- observability plane (repro.obs) ------------------------------------
+    trace_sample_rate: float = 0.0     # fraction of roots traced; 0 = off
+                                       # (span() short-circuits, records
+                                       # carry no trace id — the seed's
+                                       # exact behaviour)
+    trace_capacity: int = 4096         # flight-recorder span ring bound
+    trace_export_dir: Optional[str] = None  # JSONL span export (None = off)
+    metrics_history: int = 8192        # ring bound on the Metrics
+                                       # sent/received/deleted series
+                                       # (0/None = unbounded, the seed's
+                                       # leak)
+    # self-monitoring loop: sample the metrics registry every this many
+    # virtual seconds into the __health__ channel so the rule engine
+    # alarms on the platform itself (None = off)
+    selfmon_interval_s: Optional[float] = None
+    selfmon_rules: Optional[list] = None   # override the default health
+                                       # rules (dead-letter flood +
+                                       # backend-lag anomaly)
+    selfmon_dead_letter_threshold: float = 100.0  # flood rule bound
+                                       # (dead letters per window)
 
 
 @dataclass
 class Metrics:
-    """Per-interval counters — the CloudWatch charts of Fig. 4."""
+    """Per-interval counters — the CloudWatch charts of Fig. 4.
+
+    The time series (``sent``/``received``/``deleted``) are bounded
+    rings: ``history`` keeps the newest N points (the chart window) so a
+    long-lived pipeline holds steady memory.  ``history=0``/``None``
+    keeps them unbounded lists."""
 
     sent: List[tuple] = field(default_factory=list)      # (t, n) enqueued
     received: List[tuple] = field(default_factory=list)  # (t, n) processed
     deleted: List[tuple] = field(default_factory=list)   # (t, n) completed
+    history: Optional[int] = None
     indexed_total: int = 0
     fetched_total: int = 0
     not_modified_total: int = 0
@@ -169,6 +196,14 @@ class Metrics:
     # {connector: fetches/items/not_modified/errors/backoffs/deferred_s}
     ingest: dict = field(default_factory=dict)
 
+    def __post_init__(self) -> None:
+        if self.history:
+            self.sent = collections.deque(self.sent, maxlen=self.history)
+            self.received = collections.deque(self.received,
+                                              maxlen=self.history)
+            self.deleted = collections.deque(self.deleted,
+                                             maxlen=self.history)
+
 
 class AlertMixPipeline:
     def __init__(self, cfg: PipelineConfig, *, seed: int = 0,
@@ -177,6 +212,36 @@ class AlertMixPipeline:
                  analytics_rules: Optional[list] = None):
         self.cfg = cfg
         self.now = 0.0
+        # ---- observability plane (repro.obs): one metrics registry + one
+        # tracer for every plane.  Ingress accounting is NATIVE registry
+        # counters (the old dict-of-dicts + its second lock are gone);
+        # everything whose counters live elsewhere (sinks, store,
+        # scheduler, dead letters) is adopted by the _sync_registry
+        # collector, so snapshot()/render_prometheus() are always whole.
+        self.obs = Observability(
+            sample_rate=cfg.trace_sample_rate,
+            trace_capacity=cfg.trace_capacity,
+            export_dir=cfg.trace_export_dir, seed=seed)
+        self.tracer = self.obs.tracer
+        reg = self.obs.metrics
+        self._m_fetches = reg.counter(
+            "ingest_fetches_total", "connector fetches attempted")
+        self._m_items = reg.counter(
+            "ingest_items_total", "feed items returned by fetches")
+        self._m_not_modified = reg.counter(
+            "ingest_not_modified_total", "conditional-GET 304 responses")
+        self._m_fetch_errors = reg.counter(
+            "ingest_fetch_errors_total", "connector fetches that raised")
+        self._m_backoffs = reg.counter(
+            "ingest_backoffs_total",
+            "fetches whose backoff hint deferred the source beyond its "
+            "own interval")
+        self._m_deferred = reg.counter(
+            "ingest_deferred_seconds_total",
+            "total extra deferral seconds applied by backoff hints")
+        self._m_fetch_seconds = reg.histogram(
+            "ingest_fetch_seconds", "wall-clock connector fetch latency")
+        reg.add_collector(self._sync_registry)
         # ---- durability plane (repro.store): mounted before anything that
         # can dead-letter, so every published record is journaled from t=0
         self.store = None
@@ -201,11 +266,7 @@ class AlertMixPipeline:
         self.connectors.register(ingest.PushConnector(
             capacity=cfg.push_capacity, dead_letters=self.dead_letters))
         self.item_hook = item_hook
-        self.metrics = Metrics()
-        # per-connector ingress counters (fetch-rate + back-pressure
-        # observability; workers may run threaded, hence the lock)
-        self._cstats_lock = threading.Lock()
-        self._connector_stats: Dict[str, Dict[str, float]] = {}
+        self.metrics = Metrics(history=cfg.metrics_history)
 
         # ---- delivery layer: every accepted document flows through ONE
         # FanOutSink; each backend gets its own retry envelope (exponential
@@ -218,8 +279,16 @@ class AlertMixPipeline:
         backends = []
         for s in self.sinks:
             terminal = as_sink(s)
+            write_target = terminal
+            if self.tracer.enabled:
+                # inside the retry envelope so EVERY attempt — first try,
+                # backoff retry, dispatcher-thread write, replay — records
+                # a delivery.write span; named after the terminal so the
+                # delivery_failed:<backend> reason key is unchanged
+                write_target = TracingSink(terminal, self.tracer,
+                                           name=terminal.name)
             backend = RetryingSink(
-                terminal,
+                write_target,
                 max_attempts=cfg.delivery_retry_attempts,
                 backoff_s=cfg.delivery_retry_backoff_s,
                 dead_letters=self.dead_letters,
@@ -268,28 +337,77 @@ class AlertMixPipeline:
                                   resizer=resizer)
 
         # optional windowed-analytics + alert-rule stage (repro.alerts):
-        # worker-enriched documents flow in keyed by channel; the pipeline's
-        # virtual clock drives the watermark; late events -> dead letters
+        # worker-enriched documents flow in keyed by channel — or by an
+        # explicit doc["key"]/doc["value"], which is how the __health__
+        # stream carries metric series; the pipeline's virtual clock
+        # drives the watermark; late events -> dead letters
         self.analytics = None
-        if cfg.analytics or analytics_rules is not None:
+        if (cfg.analytics or analytics_rules is not None
+                or cfg.selfmon_interval_s is not None):
             from repro.alerts import AnalyticsStage, ThresholdRule, WindowSpec
-            rules = analytics_rules if analytics_rules is not None else [
-                ThresholdRule("volume_spike", metric="count", op=">=",
-                              threshold=50.0)]
+            if analytics_rules is not None:
+                rules = list(analytics_rules)
+            elif cfg.analytics:
+                rules = [ThresholdRule("volume_spike", metric="count",
+                                       op=">=", threshold=50.0)]
+            else:
+                rules = []      # self-monitoring only: health rules below
             self.analytics = AnalyticsStage(
                 WindowSpec(kind=cfg.window_kind, size_s=cfg.window_size_s,
                            allowed_lateness_s=cfg.allowed_lateness_s),
                 rules,
                 watermark_lag_s=cfg.watermark_lag_s,
-                dead_letters=self.dead_letters)
+                dead_letters=self.dead_letters,
+                key_fn=lambda doc: str(doc.get("key",
+                                               doc.get("channel", "all"))),
+                value_fn=lambda doc: float(doc.get("value", 1.0)))
+            self.analytics.tracer = self.tracer
         if self.store is not None:
             # the replay engine aggregates through the SAME rule-engine
             # state the live WindowOperator feeds (batch/live unification)
             self.store.replay.analytics = self.analytics
+            self.store.replay.tracer = self.tracer
         # per-backend health, tracked across steps so a False -> True flip
         # (backend recovery) can trigger an automatic journal replay
         self._backend_health: Dict[str, bool] = {
             b.terminal.name: b.healthy for b in self.fan_out.backends}
+
+        # ---- self-monitoring loop (repro.obs.selfmon): the registry
+        # re-enters the platform as an ordinary stream on the __health__
+        # channel — registered connector, scheduled source, normal worker
+        # path — so the rule engine above alarms on the platform itself
+        self.selfmon = None
+        self.selfmon_sid = None
+        if cfg.selfmon_interval_s is not None:
+            from repro.alerts import ThresholdRule, ZScoreRule
+            from repro.obs.selfmon import HEALTH_CHANNEL, MetricsConnector
+            self.selfmon = MetricsConnector(self.obs.metrics)
+            self.connectors.register(self.selfmon)
+            self.selfmon_sid = self.add_source(
+                HEALTH_CHANNEL, url="obs://registry",
+                interval_s=cfg.selfmon_interval_s,
+                first_due=cfg.selfmon_interval_s,
+                connector=self.selfmon.name)
+            health_rules = cfg.selfmon_rules
+            if health_rules is None:
+                health_rules = [
+                    # dead-letter flood: the journal growing by more than
+                    # the bound inside one window (counters publish
+                    # per-sample deltas; windows sum them into a rate)
+                    ThresholdRule(
+                        "selfmon_dead_letter_flood", metric="sum", op=">=",
+                        threshold=cfg.selfmon_dead_letter_threshold,
+                        severity="critical",
+                        key_prefix="__health__.dead_letters_total"),
+                    # backend lag departing its own history (gauges
+                    # publish levels; z-score learns the usual level)
+                    ZScoreRule(
+                        "selfmon_backend_lag_anomaly", metric="mean",
+                        z=3.0, severity="warning",
+                        key_prefix="__health__.delivery_lag"),
+                ]
+            for rule in health_rules:
+                self.analytics.engine.add_rule(rule)
 
         # populate the registry (incremental add — sources spread over the
         # first interval so picks don't all collide at t=0)
@@ -325,89 +443,125 @@ class AlertMixPipeline:
         cursor = self._cursor_cls(etag=src.etag,
                                   last_modified=src.last_modified,
                                   position=src.position)
-        try:
-            res = connector.fetch(src, cursor, self.now)
-        except Exception as exc:      # connector fault -> backoff, not crash
-            self.metrics.fetch_errors_total += 1
-            self._note_fetch(src.connector, error=True)
-            self.dead_letters.publish(
-                {"sid": src.sid, "connector": src.connector,
-                 "error": repr(exc)},
-                reason="connector_error")
-            self.registry.mark_failed(src.sid, self.now)
-            return
-        self.metrics.fetched_total += 1
-        # back-pressure gauges track what the hint actually DEFERS
-        # beyond the source's own cadence (a hint <= interval_s applies
-        # zero extra delay — max(interval, hint) — and must not read as
-        # phantom back-pressure on the operator surfaces)
-        deferred = None
-        if res.backoff_hint_s is not None:
-            deferred = max(0.0, res.backoff_hint_s - src.interval_s)
-        self._note_fetch(src.connector, items=len(res.items),
-                         not_modified=res.status == NOT_MODIFIED,
-                         deferred_s=deferred)
-        if res.status == NOT_MODIFIED:
-            self.metrics.not_modified_total += 1
-            # a 429-style hint can ride a NOT_MODIFIED (rate limiter)
-            self.registry.mark_processed(src.sid, self.now, etag=res.etag,
-                                         position=res.position,
-                                         backoff_hint_s=res.backoff_hint_s)
-            return
-        if res.redirected_from:
-            self.metrics.redirects_total += 1      # follow the hop
-        accepted = 0
-        out_batch = []
-        for item in res.items:
-            if item.malformed:
-                self.metrics.malformed_total += 1
-                self.dead_letters.publish(item, reason="malformed_item")
-                continue
-            h = content_hash(item.guid)
-            if self.dedup.seen_before(h):
-                self.metrics.duplicates_total += 1
-                continue
-            doc = {"title": item.title, "body": item.body,
-                   "published_at": item.published_at, "sid": src.sid,
-                   "channel": src.channel}
-            out_batch.append((item.guid, doc))
-            if self.item_hook is not None:
-                self.item_hook(doc)
-            if self.analytics is not None:
-                self.analytics.observe(doc, now=self.now)
-            accepted += 1
-        if out_batch:
-            if self.store is not None:       # tee into the durable log
-                self.store.append_documents(out_batch)
-            self.delivery.emit(out_batch)
-        self.metrics.indexed_total += accepted
-        self.registry.mark_processed(
-            src.sid, self.now, etag=res.etag, last_modified=res.last_modified,
-            position=res.position, backoff_hint_s=res.backoff_hint_s)
-        for r in self.routers:
-            r.on_processed()
+        # one trace root per fetched source (sampled; a no-op context
+        # when tracing is off): ingest.fetch -> pipeline.process ->
+        # store.append -> delivery.emit read back as one trace, and
+        # accepted docs carry the trace_id so the asynchronous
+        # delivery.write (TracingSink) joins the same trace later
+        with self.tracer.span(          # positional: the hottest call
+                "ingest.fetch", None,
+                {"sid": src.sid, "channel": src.channel,
+                 "connector": src.connector},
+                False) as root:          # stack-free root: children ride
+                                         # .event(), nothing nests deeper
+            t0 = time.perf_counter()
+            try:
+                res = connector.fetch(src, cursor, self.now)
+            except Exception as exc:  # connector fault -> backoff, not crash
+                self._m_fetch_seconds.observe(time.perf_counter() - t0,
+                                              connector=src.connector)
+                root.set("error", type(exc).__name__)
+                self.metrics.fetch_errors_total += 1
+                self._note_fetch(src.connector, error=True)
+                self.dead_letters.publish(
+                    {"sid": src.sid, "connector": src.connector,
+                     "error": repr(exc)},
+                    reason="connector_error")
+                self.registry.mark_failed(src.sid, self.now)
+                return
+            self._m_fetch_seconds.observe(time.perf_counter() - t0,
+                                          connector=src.connector)
+            self.metrics.fetched_total += 1
+            # back-pressure gauges track what the hint actually DEFERS
+            # beyond the source's own cadence (a hint <= interval_s applies
+            # zero extra delay — max(interval, hint) — and must not read as
+            # phantom back-pressure on the operator surfaces)
+            deferred = None
+            if res.backoff_hint_s is not None:
+                deferred = max(0.0, res.backoff_hint_s - src.interval_s)
+            self._note_fetch(src.connector, items=len(res.items),
+                             not_modified=res.status == NOT_MODIFIED,
+                             deferred_s=deferred)
+            root.set("status", res.status)
+            root.set("items", len(res.items))
+            if res.status == NOT_MODIFIED:
+                self.metrics.not_modified_total += 1
+                # a 429-style hint can ride a NOT_MODIFIED (rate limiter)
+                self.registry.mark_processed(src.sid, self.now,
+                                             etag=res.etag,
+                                             position=res.position,
+                                             backoff_hint_s=res.backoff_hint_s)
+                return
+            if res.redirected_from:
+                self.metrics.redirects_total += 1      # follow the hop
+            accepted = 0
+            out_batch = []
+            trace_id = root.trace_id
+            # leaf stages land as span EVENTS on the fetch root — tuple
+            # appends materialized as child spans on read (cheap path);
+            # a raise mid-stage is captured on the root by its __exit__
+            t0 = time.perf_counter()
+            for item in res.items:
+                if item.malformed:
+                    self.metrics.malformed_total += 1
+                    self.dead_letters.publish(item,
+                                              reason="malformed_item")
+                    continue
+                h = content_hash(item.guid)
+                if self.dedup.seen_before(h):
+                    self.metrics.duplicates_total += 1
+                    continue
+                doc = {"title": item.title, "body": item.body,
+                       "published_at": item.published_at, "sid": src.sid,
+                       "channel": src.channel}
+                if item.extra:   # structured connector payload
+                    doc.update(item.extra)
+                if trace_id is not None:
+                    doc["trace"] = trace_id
+                out_batch.append((item.guid, doc))
+                if self.item_hook is not None:
+                    self.item_hook(doc)
+                if self.analytics is not None:
+                    self.analytics.observe(doc, now=self.now)
+                accepted += 1
+            root.event("pipeline.process", t0, {"accepted": accepted})
+            if out_batch:
+                n_out = len(out_batch)
+                if self.store is not None:   # tee into the durable log
+                    t0 = time.perf_counter()
+                    self.store.append_documents(out_batch)
+                    root.event("store.append", t0, {"records": n_out})
+                # no span here: the delivery plane is covered by the
+                # TracingSink's delivery.write at the moment the write
+                # actually lands (inside the retry envelope)
+                self.delivery.emit(out_batch)
+            self.metrics.indexed_total += accepted
+            self.registry.mark_processed(
+                src.sid, self.now, etag=res.etag,
+                last_modified=res.last_modified,
+                position=res.position, backoff_hint_s=res.backoff_hint_s)
+            for r in self.routers:
+                r.on_processed()
 
     def _note_fetch(self, connector: str, *, items: int = 0,
                     not_modified: bool = False, error: bool = False,
                     deferred_s: Optional[float] = None) -> None:
-        """Per-connector fetch-rate + back-pressure accounting
-        (``connector_stats()`` live view, ``Metrics.ingest`` snapshot).
+        """Per-connector fetch-rate + back-pressure accounting, written
+        natively into the metrics registry (``connector_stats()`` is a
+        view over it; ``Metrics.ingest`` the flush-time snapshot).
         ``deferred_s`` is the EXTRA delay the hint added on top of the
         source's interval; only a positive deferral counts as a
         backoff."""
-        with self._cstats_lock:
-            st = self._connector_stats.setdefault(connector, {
-                "fetches": 0, "items": 0, "not_modified": 0, "errors": 0,
-                "backoffs": 0, "deferred_s": 0.0})
-            st["fetches"] += 1
-            st["items"] += items
-            if not_modified:
-                st["not_modified"] += 1
-            if error:
-                st["errors"] += 1
-            if deferred_s is not None and deferred_s > 0.0:
-                st["backoffs"] += 1
-                st["deferred_s"] += float(deferred_s)
+        self._m_fetches.inc(1, connector=connector)
+        if items:
+            self._m_items.inc(items, connector=connector)
+        if not_modified:
+            self._m_not_modified.inc(1, connector=connector)
+        if error:
+            self._m_fetch_errors.inc(1, connector=connector)
+        if deferred_s is not None and deferred_s > 0.0:
+            self._m_backoffs.inc(1, connector=connector)
+            self._m_deferred.inc(float(deferred_s), connector=connector)
 
     # ---- runtime control API (repro.ingest) --------------------------------
     def register_channel(self, name: str) -> bool:
@@ -514,7 +668,10 @@ class AlertMixPipeline:
     # ---- virtual-time drive ------------------------------------------------
     def step(self, dt: float = 1.0, per_worker: int = 4) -> dict:
         self.now += dt
-        picked = self.scheduler.maybe_tick(self.now)
+        with self.tracer.span("scheduler.tick",
+                              attrs={"t": self.now}) as tick:
+            picked = self.scheduler.maybe_tick(self.now)
+            tick.set("picked", picked)
         pulled_box = [0]
 
         def replenish(now):
@@ -539,7 +696,9 @@ class AlertMixPipeline:
             self.metrics.deleted.append((self.now, done))
         alerts_fired = 0
         if self.analytics is not None:
-            fired = self.analytics.advance(self.now)
+            with self.tracer.span("window.advance") as adv:
+                fired = self.analytics.advance(self.now)
+                adv.set("alerts", len(fired))
             alerts_fired = len(fired)
             self.metrics.alerts_total += alerts_fired
             self.metrics.windows_closed_total = self.analytics.closed_total
@@ -579,9 +738,12 @@ class AlertMixPipeline:
                 if callable(drain) and not drain():
                     self._backend_health[name] = was   # retry the flip
                     continue
-                res = self.store.replay.replay_dead_letters(
-                    f"delivery_failed:{name}", b,
-                    batch=self.cfg.replay_batch)
+                with self.tracer.span("replay.dead_letters",
+                                      attrs={"backend": name}) as rsp:
+                    res = self.store.replay.replay_dead_letters(
+                        f"delivery_failed:{name}", b,
+                        batch=self.cfg.replay_batch)
+                    rsp.set("replayed", res["replayed"])
                 self.metrics.replayed_total += res["replayed"]
 
     def replay_status(self) -> dict:
@@ -599,10 +761,12 @@ class AlertMixPipeline:
 
     def close(self) -> None:
         """Flush delivery and close the durability plane (fsyncs the
-        active log segments so a reopen sees every appended record)."""
+        active log segments so a reopen sees every appended record) and
+        the observability plane (flushes the span exporter)."""
         self.flush_delivery()
         if self.store is not None:
             self.store.close()
+        self.obs.close()
 
     def flush_delivery(self) -> None:
         """Force buffered/parked records out to every backend and refresh
@@ -615,7 +779,10 @@ class AlertMixPipeline:
         if (self.store is not None and self.analytics is not None
                 and self.cfg.replay_late_on_flush
                 and self.analytics.operator.spec.kind != "session"):
-            res = self.store.replay.replay_late_events(watermark=self.now)
+            with self.tracer.span("replay.late_events") as rsp:
+                res = self.store.replay.replay_late_events(
+                    watermark=self.now)
+                rsp.set("alerts", res["alerts"])
             self.metrics.alerts_total += res["alerts"]
         self.delivery.flush()
         if self.store is not None and self.cfg.replay_auto:
@@ -634,10 +801,138 @@ class AlertMixPipeline:
     def connector_stats(self) -> dict:
         """Live per-connector ingress counters: fetches, items,
         not_modified, errors, and back-pressure (backoffs applied +
-        total deferred seconds).  ``Metrics.ingest`` holds the snapshot
-        taken at the last ``flush_delivery``."""
-        with self._cstats_lock:
-            return {k: dict(v) for k, v in self._connector_stats.items()}
+        total deferred seconds).  A view assembled from the metrics
+        registry — repro.obs owns the one copy of these numbers.
+        ``Metrics.ingest`` holds the snapshot taken at the last
+        ``flush_delivery``."""
+        columns = (("fetches", self._m_fetches),
+                   ("items", self._m_items),
+                   ("not_modified", self._m_not_modified),
+                   ("errors", self._m_fetch_errors),
+                   ("backoffs", self._m_backoffs),
+                   ("deferred_s", self._m_deferred))
+        out: Dict[str, Dict[str, float]] = {}
+        for key, counter in columns:
+            for labels, value in counter.items():
+                st = out.setdefault(labels.get("connector", ""), {
+                    "fetches": 0, "items": 0, "not_modified": 0,
+                    "errors": 0, "backoffs": 0, "deferred_s": 0.0})
+                st[key] = value if key == "deferred_s" else int(value)
+        return out
+
+    # ---- observability plane (repro.obs) ------------------------------------
+    def _sync_registry(self) -> None:
+        """Collector: adopt every externally-tracked total into the
+        registry (``Counter.sync`` is set-to-max, so re-running is
+        idempotent).  Registered with ``add_collector`` so it runs right
+        before every ``snapshot()`` / ``render_prometheus()`` / selfmon
+        sample — exposition is always whole without per-event cost."""
+        reg = self.obs.metrics
+        m = self.metrics
+        c, g = reg.counter, reg.gauge
+        c("docs_indexed_total",
+          "documents accepted and handed to delivery").sync(m.indexed_total)
+        c("docs_duplicates_total",
+          "items dropped by the dedup window").sync(m.duplicates_total)
+        c("docs_malformed_total",
+          "items dead-lettered as malformed").sync(m.malformed_total)
+        c("redirects_total", "fetches that followed a redirect hop").sync(
+            m.redirects_total)
+        c("alerts_fired_total", "alerts fired by the rule engine").sync(
+            m.alerts_total)
+        c("windows_closed_total", "event-time windows closed").sync(
+            m.windows_closed_total)
+        c("replayed_records_total",
+          "records re-delivered from the journal").sync(m.replayed_total)
+        c("scheduler_picked_total", "sources picked by the cron").sync(
+            self.scheduler.picked_total)
+        c("scheduler_requeued_total", "expired leases requeued").sync(
+            self.scheduler.requeued_total)
+        c("unroutable_total",
+          "picks dead-lettered for an unopened channel").sync(
+            self.distributor.unroutable)
+        g("pool_size", "current worker-pool size").set(self.pool.size)
+        g("mailbox_depth", "messages parked in the worker mailbox").set(
+            len(self.mailbox))
+        g("channel_backlog", "messages queued across channel queues").set(
+            sum(len(q) for q in self.main_queues.values()))
+        dl = self.dead_letters.snapshot()
+        dlc = c("dead_letters_total",
+                "dead-lettered records by taxonomy reason")
+        for reason, n in dl["by_reason"].items():
+            dlc.sync(n, reason=reason)
+        # delivery layer, one series set per backend
+        for key, st in self.fan_out.backend_stats().items():
+            c("delivery_emitted_total",
+              "records accepted by the terminal sink").sync(
+                st["terminal_emitted"], backend=key)
+            c("delivery_retried_total", "re-delivery attempts").sync(
+                st["retried"], backend=key)
+            c("delivery_dead_lettered_total",
+              "records given up on after retries").sync(
+                st["dead_lettered"], backend=key)
+            g("delivery_lag",
+              "records emitted to the fan-out but not yet accepted by "
+              "this backend's terminal").set(st["lag"], backend=key)
+            g("delivery_healthy", "1 = backend healthy, 0 = failing").set(
+                1.0 if st["healthy"] else 0.0, backend=key)
+            g("delivery_pending_retry",
+              "records parked awaiting retry backoff").set(
+                st.get("pending_retry", 0), backend=key)
+            if "queue_depth" in st:        # dispatching backend
+                g("dispatch_queue_depth",
+                  "batches waiting in the hand-off queue").set(
+                    st["queue_depth"], backend=key)
+                g("dispatch_handoff_p99_ms",
+                  "p99 hand-off queue wait").set(
+                    st["handoff_p99_ms"], backend=key)
+                c("dispatch_dropped_total",
+                  "batches dead-lettered on hand-off overflow").sync(
+                    st["dropped"], backend=key)
+        if self.store is not None:
+            st = self.store.status()
+            c("store_appended_records_total",
+              "records appended to the event log").sync(
+                st["appended_records"])
+            c("store_appended_bytes_total",
+              "bytes appended to the event log").sync(st["appended_bytes"])
+            g("store_segments", "sealed event-log segments").set(
+                st["segments"])
+            c("store_journal_records_total",
+              "records appended to the dead-letter journal").sync(
+                st["journal_records"])
+            g("store_pending_replay_records",
+              "journaled records awaiting replay").set(
+                st["pending_replay_records"])
+        ts = self.tracer.status()
+        g("trace_flight_spans",
+          "finished spans retained in the flight recorder").set(
+            ts["flight_spans"])
+        c("trace_finished_spans_total", "spans finished since start").sync(
+            ts["finished_spans"])
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the whole platform (runs the
+        collectors first, so the scrape is current)."""
+        return self.obs.metrics.render_prometheus()
+
+    def metrics_snapshot(self) -> dict:
+        """json-safe registry dump (counters/gauges/histograms)."""
+        return self.obs.metrics.snapshot()
+
+    def obs_status(self) -> dict:
+        """Observability-plane status: tracer counters + registered
+        metric names + self-monitoring state."""
+        out = self.obs.status()
+        out["selfmon"] = (None if self.selfmon is None
+                          else {"sid": self.selfmon_sid,
+                                "samples": self.selfmon.samples})
+        return out
+
+    def trace(self, trace_id: str) -> list:
+        """Every retained span of one trace, start-ordered (the flight
+        recorder's reconstruction surface)."""
+        return self.tracer.trace(trace_id)
 
     def delivery_stats(self) -> dict:
         """Per-backend delivery counters: emitted (records the terminal

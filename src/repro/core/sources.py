@@ -37,6 +37,10 @@ class FeedItem:
     body: str
     published_at: float
     malformed: bool = False
+    # structured payload merged into the worker-built document (used by
+    # the self-monitoring MetricsConnector to carry key/value metrics;
+    # any connector may attach extra fields the same way)
+    extra: Optional[dict] = None
 
 
 @dataclass

@@ -1,0 +1,67 @@
+"""repro.obs — the unified observability plane.
+
+The paper's operational story (Fig. 4) is CloudWatch charts and alarms
+over pipeline counters.  This plane reproduces the whole story and then
+closes the loop the paper leaves to AWS:
+
+  MetricsRegistry  typed Counter / Gauge / Histogram instruments with
+                   labeled series, Prometheus text exposition, and a
+                   json-safe snapshot()            (metrics.py)
+  Tracer           trace_id/span() context managers with configurable
+                   sampling, a bounded flight recorder, JSONL export,
+                   and propagation on records — one document's journey
+                   across ingest -> pipeline -> store -> delivery reads
+                   back as one trace              (trace.py)
+  StageProfiler    always-on per-stage wall-clock breakdown (the
+                   batch-replay chain's 266x gap, itemized)  (profiler.py)
+  MetricsConnector self-monitoring: registry snapshots re-enter the
+                   platform as an ordinary stream on a ``__health__``
+                   channel, so the EXISTING rule engine alarms on the
+                   platform itself               (selfmon.py)
+
+``Observability`` bundles a registry + tracer for components that mount
+the plane as one unit (``AlertMixPipeline`` builds one from
+``PipelineConfig.trace_sample_rate`` / ``trace_export_dir``).
+
+Import note: this package never imports ``repro.core`` / ``repro.store``
+at module level (they import *us*); ``selfmon`` — which needs the
+Connector data types — is imported lazily by its users.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.profiler import StageProfiler
+from repro.obs.trace import Span, TraceExporter, Tracer, TracingSink
+
+
+class Observability:
+    """Registry + tracer, built as one unit from pipeline config."""
+
+    def __init__(self, *, sample_rate: float = 0.0, trace_capacity: int = 4096,
+                 export_dir: Optional[str] = None, seed: int = 0):
+        exporter = TraceExporter(export_dir) if export_dir else None
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer(sample_rate=sample_rate,
+                             capacity=trace_capacity, seed=seed,
+                             exporter=exporter)
+
+    def status(self) -> dict:
+        return {"tracer": self.tracer.status(),
+                "metrics": self.metrics.names()}
+
+    def close(self) -> None:
+        if self.tracer.exporter is not None:
+            self.tracer.exporter.close()
+
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "Observability",
+    "Span", "StageProfiler", "TraceExporter", "Tracer", "TracingSink",
+]

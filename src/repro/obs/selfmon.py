@@ -1,0 +1,101 @@
+"""Self-monitoring loop — the platform dogfooding its own analytics.
+
+The paper runs AlertMix off CloudWatch alarms over its pipeline
+counters.  Here the monitoring stream is itself a stream (Uber's
+real-time stack makes the same move): :class:`MetricsConnector` is an
+ordinary ingest Connector that, on each poll of its ``__health__``
+source, samples the metrics registry and emits one document per metric
+series.  Those documents ride the NORMAL worker path — dedup, window
+operator, rule engine, delivery, durable log — so platform-health
+alerting needs zero new machinery: a ``ThresholdRule`` or ``ZScoreRule``
+with ``key_prefix="__health__."`` alarms on the platform exactly the
+way product rules alarm on the data.
+
+Each emitted document::
+
+    {"key": "__health__.<metric>[.<label-values>]",
+     "value": <delta for counters, level for gauges, p99 for histograms>,
+     "metric": <name>, "published_at": <virtual now>}
+
+Counters publish the DELTA since the previous sample (a per-interval
+rate — windows sum deltas into rates-per-window, which is what a
+dead-letter-flood threshold wants); gauges publish the current level
+(windows max/mean them — what a backend-lag z-score wants).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional
+
+from repro.core.sources import NOT_MODIFIED, OK, FeedItem, FetchResult
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+
+HEALTH_CHANNEL = "__health__"
+
+
+def health_key(metric: str, labels: Optional[dict] = None) -> str:
+    """The window key a metric series aggregates under."""
+    key = f"{HEALTH_CHANNEL}.{metric}"
+    if labels:
+        key += "." + ".".join(str(v) for _, v in sorted(labels.items()))
+    return key
+
+
+class MetricsConnector:
+    """Publish registry snapshots as feed items on each fetch; see the
+    module docstring.  ``include`` (exact metric names) narrows the
+    sampled set; ``collect`` is called before each sample so externally-
+    owned gauges are fresh (the pipeline passes its registry-sync
+    hook)."""
+
+    def __init__(self, registry: MetricsRegistry, *, name: str = "metrics",
+                 include: Optional[List[str]] = None,
+                 collect: Optional[Callable[[], None]] = None):
+        self.registry = registry
+        self.name = name
+        self.include = set(include) if include is not None else None
+        self.collect = collect
+        self.samples = 0
+        self._lock = threading.Lock()
+        # previous counter totals per (metric, label-key): delta source
+        self._prev: Dict[str, float] = {}
+
+    def _sample(self, now: float) -> List[FeedItem]:
+        if self.collect is not None:
+            self.collect()
+        self.registry.collect()
+        items: List[FeedItem] = []
+
+        def add(metric: str, labels: dict, value: float) -> None:
+            key = health_key(metric, labels)
+            items.append(FeedItem(
+                guid=f"{self.name}:{self.samples}:{key}",
+                title=key, body="", published_at=now,
+                extra={"key": key, "value": float(value), "metric": metric}))
+
+        for name in self.registry.names():
+            if self.include is not None and name not in self.include:
+                continue
+            inst = self.registry.get(name)
+            if isinstance(inst, Counter):
+                for labels, total in inst.items():
+                    pk = health_key(name, labels)
+                    with self._lock:
+                        prev = self._prev.get(pk, 0.0)
+                        self._prev[pk] = float(total)
+                    add(name, labels, max(0.0, float(total) - prev))
+            elif isinstance(inst, Gauge):
+                for labels, value in inst.items():
+                    add(name, labels, float(value))
+            elif isinstance(inst, Histogram):
+                for labels, _ in inst.items():
+                    add(f"{name}_p99", labels,
+                        inst.quantile(0.99, **labels))
+        return items
+
+    def fetch(self, source, cursor, now: float) -> FetchResult:
+        items = self._sample(now)
+        self.samples += 1
+        if not items:
+            return FetchResult(NOT_MODIFIED, etag=cursor.etag)
+        return FetchResult(OK, items=items, last_modified=now)

@@ -324,6 +324,19 @@ class ServeEngine:
             return {"enabled": False}
         return {"enabled": True, **self.ingest.delivery_stats()}
 
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the attached pipeline's metrics
+        registry (the operator scrape endpoint's payload)."""
+        return self._require_ingest().metrics_text()
+
+    def obs_status(self) -> dict:
+        """Observability-plane status of the attached pipeline (tracer
+        counters, registered metric names, self-monitoring state), or
+        ``{"enabled": False}`` without an ingestion plane."""
+        if self.ingest is None:
+            return {"enabled": False}
+        return {"enabled": True, **self.ingest.obs_status()}
+
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):
             pending = len(self.main_q) + len(self.prio_q)

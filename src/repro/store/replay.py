@@ -28,11 +28,13 @@ where it left off instead of starting over or skipping ahead.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.dedup import DedupWindow, content_hash
+from repro.obs import StageProfiler
 
 Event = Tuple[str, float, float]          # (key, event_time, value)
 
@@ -58,6 +60,13 @@ class ReplayEngine:
         self.stats = {"replays": 0, "replayed_records": 0, "deduped": 0,
                       "failed_batches": 0, "events_replayed": 0,
                       "aggregates": 0, "alerts": 0}
+        # always-on per-stage wall-clock breakdown of the batch-replay
+        # chain (decode -> pack_events -> kernel -> unpack -> state_merge
+        # [-> redeliver]); surfaced via status()["profile"] — ROADMAP
+        # item 1's 266x replay-vs-live gap, itemized
+        self.profiler = StageProfiler("replay")
+        # optional repro.obs.Tracer (the pipeline mounts its own)
+        self.tracer = None
 
     # ---- route 1: re-deliver dead-lettered documents ------------------------
     def replay_dead_letters(self, reason: str, sink, *, batch: int = 256,
@@ -113,33 +122,35 @@ class ReplayEngine:
             pend_hashes.clear()
             return True
 
-        for off, record in self.journal.scan(reason, cursor):
-            if max_records is not None and replayed + len(pend) >= max_records:
-                break
-            rec = record
-            if isinstance(rec, list):     # (doc_id, doc) came back as a list
-                rec = tuple(rec)
-            # dedup is scoped PER REASON and keyed by full record
-            # content: two backends that dead-lettered the same doc each
-            # get their own replay, and a doc that dead-letters AGAIN
-            # later (new content, new journal record) is not mistaken
-            # for the already-replayed earlier one — only a repeat pass
-            # over the identical journal record is a duplicate
-            h = content_hash(f"{reason}|" + json.dumps(
-                record, sort_keys=True, default=repr))
-            if self.dedup.contains(h):    # peek; register only on landing
-                deduped += 1
-                pend_last = off + 1
-                continue
-            pend.append(rec)
-            pend_hashes.append(h)
-            pend_last = off + 1
-            if len(pend) >= batch:
-                if not _land():
-                    stopped = True
+        with self.profiler.stage("redeliver"):
+            for off, record in self.journal.scan(reason, cursor):
+                if (max_records is not None
+                        and replayed + len(pend) >= max_records):
                     break
-        if not stopped:
-            stopped = not _land()
+                rec = record
+                if isinstance(rec, list):  # (doc_id, doc) came back as a list
+                    rec = tuple(rec)
+                # dedup is scoped PER REASON and keyed by full record
+                # content: two backends that dead-lettered the same doc each
+                # get their own replay, and a doc that dead-letters AGAIN
+                # later (new content, new journal record) is not mistaken
+                # for the already-replayed earlier one — only a repeat pass
+                # over the identical journal record is a duplicate
+                h = content_hash(f"{reason}|" + json.dumps(
+                    record, sort_keys=True, default=repr))
+                if self.dedup.contains(h):  # peek; register only on landing
+                    deduped += 1
+                    pend_last = off + 1
+                    continue
+                pend.append(rec)
+                pend_hashes.append(h)
+                pend_last = off + 1
+                if len(pend) >= batch:
+                    if not _land():
+                        stopped = True
+                        break
+            if not stopped:
+                stopped = not _land()
         with self._lock:
             self.stats["replays"] += 1
             self.stats["replayed_records"] += replayed
@@ -159,12 +170,19 @@ class ReplayEngine:
         from repro.alerts.batch import reduce_events
 
         spec = self.analytics.operator.spec
-        aggs = reduce_events(list(events), spec, interpret=self.interpret)
-        wm = watermark if watermark is not None \
-            else self.analytics.operator.watermark
-        for a in aggs:
-            a.closed_at_watermark = wm
-        fired = self.analytics.engine.process(aggs)
+        events = list(events)
+        ctx = (contextlib.nullcontext() if self.tracer is None
+               else self.tracer.span("replay.events",
+                                     attrs={"events": len(events)}))
+        with ctx:
+            aggs = reduce_events(events, spec, interpret=self.interpret,
+                                 profiler=self.profiler)
+            wm = watermark if watermark is not None \
+                else self.analytics.operator.watermark
+            for a in aggs:
+                a.closed_at_watermark = wm
+            with self.profiler.stage("state_merge"):
+                fired = self.analytics.engine.process(aggs)
         with self._lock:
             self.stats["events_replayed"] += len(events)
             self.stats["aggregates"] += len(aggs)
@@ -181,11 +199,12 @@ class ReplayEngine:
         stage = self.analytics
         events: List[Event] = []
         last = from_offset - 1
-        for off, payload in self.log.scan(from_offset):
-            doc = payload["doc"]
-            events.append((stage.key_fn(doc), stage.time_fn(doc),
-                           stage.value_fn(doc)))
-            last = off
+        with self.profiler.stage("decode"):     # disk scan + extraction
+            for off, payload in self.log.scan(from_offset):
+                doc = payload["doc"]
+                events.append((stage.key_fn(doc), stage.time_fn(doc),
+                               stage.value_fn(doc)))
+                last = off
         aggs, fired = self.replay_events(events, watermark=watermark)
         return {"events": len(events), "aggregates": len(aggs),
                 "alerts": len(fired), "last_offset": last}
@@ -203,12 +222,13 @@ class ReplayEngine:
             return {"events": 0, "aggregates": 0, "alerts": 0}
         events: List[Event] = []
         last = cursor
-        for off, rec in self.journal.scan("late_event", cursor):
-            if max_records is not None and len(events) >= max_records:
-                break
-            events.append((str(rec["key"]), float(rec["event_time"]),
-                           float(rec.get("value", 1.0))))
-            last = off + 1
+        with self.profiler.stage("decode"):
+            for off, rec in self.journal.scan("late_event", cursor):
+                if max_records is not None and len(events) >= max_records:
+                    break
+                events.append((str(rec["key"]), float(rec["event_time"]),
+                               float(rec.get("value", 1.0))))
+                last = off + 1
         if not events:
             return {"events": 0, "aggregates": 0, "alerts": 0}
         aggs, fired = self.replay_events(events, watermark=watermark)
@@ -220,6 +240,9 @@ class ReplayEngine:
     def status(self) -> dict:
         with self._lock:
             out = {"stats": dict(self.stats)}
+        # per-stage wall-clock breakdown of the batch chain (decode /
+        # pack_events / kernel / unpack / state_merge / redeliver)
+        out["profile"] = self.profiler.snapshot()
         if self.journal is not None:
             out["journal"] = self.journal.status()
             out["pending"] = self.journal.pending()

@@ -1,0 +1,414 @@
+"""Observability plane (repro.obs): metrics registry, tracer, stage
+profiler, TracingSink, self-monitoring — units plus the pipeline-level
+acceptance paths (one pushed document = one cross-plane trace; a
+dead-letter flood fires a __health__ alert through the ordinary rule
+engine; replay_status() itemizes the batch chain)."""
+import json
+import os
+
+import pytest
+
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Observability,
+    StageProfiler,
+    TraceExporter,
+    Tracer,
+    TracingSink,
+)
+
+
+# ---------------------------------------------------------------- registry
+def test_counter_inc_and_labels():
+    reg = MetricsRegistry()
+    c = reg.counter("fetches_total", "fetches")
+    c.inc(1, connector="sim")
+    c.inc(2, connector="sim")
+    c.inc(5, connector="push")
+    assert c.value(connector="sim") == 3
+    assert c.value(connector="push") == 5
+    assert c.total() == 8
+    with pytest.raises(ValueError):
+        c.inc(-1, connector="sim")
+
+
+def test_counter_sync_is_monotonic_set_to_max():
+    c = Counter("adopted_total")
+    c.sync(10)
+    c.sync(7)          # stale read must not regress the series
+    assert c.value() == 10
+    c.sync(12)
+    assert c.value() == 12
+
+
+def test_gauge_set_add():
+    g = Gauge("depth")
+    g.set(4, backend="es")
+    g.add(2, backend="es")
+    assert g.value(backend="es") == 6
+
+
+def test_histogram_quantiles_and_summary():
+    h = Histogram("lat", min_bound=1e-3, base=2.0, num_buckets=20)
+    for v in [0.001, 0.002, 0.004, 0.008, 0.1]:
+        h.observe(v)
+    assert h.count() == 5
+    assert h.sum() == pytest.approx(0.115)
+    # p50 resolves to a bucket upper bound >= the true median
+    assert 0.002 <= h.quantile(0.5) <= 0.008
+    # the max caps the top quantile (never reports +Inf)
+    assert h.quantile(1.0) <= 0.1 + 1e-9
+    s = h.summary()
+    assert s["count"] == 5 and s["min"] == 0.001 and s["max"] == 0.1
+    assert Histogram("empty").quantile(0.99) == 0.0
+
+
+def test_registry_kind_conflict_and_get_or_create():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    with pytest.raises(ValueError):
+        reg.gauge("x")
+    assert "x" in reg and "y" not in reg
+
+
+def test_registry_collector_runs_before_snapshot():
+    reg = MetricsRegistry()
+    external = {"total": 0}
+    reg.add_collector(
+        lambda: reg.counter("ext_total").sync(external["total"]))
+    external["total"] = 42
+    snap = reg.snapshot()
+    assert snap["counters"]["ext_total"]["series"][0]["value"] == 42
+
+
+def test_prometheus_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("reqs_total", "requests").inc(3, route="/a")
+    reg.gauge("depth").set(2)
+    reg.histogram("lat", "latency", min_bound=1e-3,
+                  num_buckets=4).observe(0.002)
+    text = reg.render_prometheus()
+    assert "# HELP reqs_total requests" in text
+    assert "# TYPE reqs_total counter" in text
+    assert 'reqs_total{route="/a"} 3' in text
+    assert "# TYPE depth gauge" in text and "depth 2" in text
+    assert "# TYPE lat histogram" in text
+    assert 'lat_bucket{le="+Inf"} 1' in text
+    assert "lat_count 1" in text and "lat_sum 0.002" in text
+    # cumulative buckets: counts never decrease down the ladder
+    counts = [int(line.rsplit(" ", 1)[1]) for line in text.splitlines()
+              if line.startswith("lat_bucket")]
+    assert counts == sorted(counts)
+
+
+def test_snapshot_is_json_safe():
+    reg = MetricsRegistry()
+    reg.counter("a").inc(1)
+    reg.gauge("b").set(2, k="v")
+    reg.histogram("c").observe(0.5)
+    json.dumps(reg.snapshot())      # must not raise
+
+
+# ---------------------------------------------------------------- tracer
+def test_tracer_disabled_is_noop():
+    tr = Tracer(sample_rate=0.0)
+    with tr.span("work") as sp:
+        assert sp.trace_id is None
+        sp.set("k", "v")            # no-op, no raise
+    assert tr.spans() == [] and not tr.enabled
+
+
+def test_tracer_sampling_all_and_nesting():
+    tr = Tracer(sample_rate=1.0)
+    with tr.span("root") as root:
+        assert root.sampled and root.trace_id
+        with tr.span("child") as child:
+            assert child.trace_id == root.trace_id
+            assert child.parent_id == root.span_id
+    spans = tr.trace(root.trace_id)
+    assert [s.name for s in spans] == ["root", "child"]
+    assert all(s.duration_ms >= 0.0 for s in spans)
+
+
+def test_tracer_partial_sampling_is_deterministic():
+    a = Tracer(sample_rate=0.5, seed=7)
+    b = Tracer(sample_rate=0.5, seed=7)
+    hits_a = []
+    hits_b = []
+    for _ in range(50):
+        with a.span("r") as sa:
+            hits_a.append(sa.sampled)
+        with b.span("r") as sb:
+            hits_b.append(sb.sampled)
+    assert hits_a == hits_b
+    assert 0 < sum(hits_a) < 50
+    # children of an unsampled root stay unsampled (no orphan spans)
+    assert all(s.parent_id is None for s in a.spans())
+
+
+def test_tracer_flight_recorder_is_bounded():
+    tr = Tracer(sample_rate=1.0, capacity=8)
+    for _ in range(50):
+        with tr.span("w"):
+            pass
+    assert len(tr.spans()) == 8
+    st = tr.status()
+    assert st["finished_spans"] == 50 and st["flight_spans"] == 8
+
+
+def test_tracer_error_capture():
+    tr = Tracer(sample_rate=1.0)
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("nope")
+    assert "RuntimeError" in tr.spans()[-1].error
+
+
+def test_trace_exporter_roundtrip_and_roll(tmp_path):
+    d = str(tmp_path / "spans")
+    exp = TraceExporter(d, max_bytes=200)    # force rolls
+    tr = Tracer(sample_rate=1.0, exporter=exp)
+    for i in range(10):
+        with tr.span("w") as sp:
+            sp.set("i", i)
+    exp.close()
+    back = list(exp.scan())
+    assert len(back) == 10
+    assert [s["attrs"]["i"] for s in back] == list(range(10))
+    assert len(os.listdir(d)) > 1            # rolled at least once
+
+
+# ---------------------------------------------------------------- profiler
+def test_stage_profiler_breakdown():
+    prof = StageProfiler()
+    for _ in range(3):
+        with prof.stage("pack"):
+            pass
+    prof.record("kernel", 0.5)
+    snap = prof.snapshot()
+    assert snap["pack"]["calls"] == 3
+    assert snap["kernel"]["total_ms"] == pytest.approx(500.0)
+    assert sum(s["share"] for s in snap.values()) == pytest.approx(1.0)
+    prof.reset()
+    assert prof.snapshot() == {}
+
+
+# ---------------------------------------------------------------- sink
+def test_tracing_sink_joins_record_traces():
+    from repro.delivery import CollectingSink
+
+    tr = Tracer(sample_rate=1.0)
+    term = CollectingSink("es")
+    sink = TracingSink(term, tr, name=term.name)
+    sink.emit([("d1", {"title": "x", "trace": "t-abc"}),
+               ("d2", {"title": "y"})])          # untraced rides along
+    assert len(term) == 2
+    spans = [s for s in tr.spans() if s.name == "delivery.write"]
+    assert len(spans) == 1
+    assert spans[0].trace_id == "t-abc"
+    assert spans[0].attrs == {"backend": "es", "records": 1, "batch": 2}
+
+
+# ----------------------------------------------------- pipeline integration
+from repro.core.pipeline import AlertMixPipeline, Metrics, PipelineConfig
+
+
+def test_tracing_off_by_default_no_doc_mutation():
+    from repro.delivery import CollectingSink
+
+    term = CollectingSink("docs")
+    p = AlertMixPipeline(PipelineConfig(num_sources=0), seed=0,
+                         sinks=[term])
+    sid = p.add_source("news", connector="push")
+    p.push(sid, [{"title": "t", "body": "b", "published_at": 1.0}])
+    p.run_for(30)
+    assert len(term) == 1
+    _, doc = term.records[0]
+    assert "trace" not in doc
+    assert p.tracer.status()["finished_spans"] == 0
+
+
+def test_single_document_trace_covers_all_planes(tmp_path):
+    """Acceptance: one pushed document yields one trace whose spans
+    cover ingest, pipeline, store, and delivery, joined by trace_id."""
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=0, trace_sample_rate=1.0,
+                       store_dir=str(tmp_path / "store")), seed=0)
+    sid = p.add_source("news", connector="push")
+    p.push(sid, [{"title": "t", "body": "b", "published_at": 1.0}])
+    p.run_for(30)
+    doc_traces = [spans for spans in p.tracer.traces().values()
+                  if any(s.name == "ingest.fetch" for s in spans)
+                  and any(s.attrs.get("status") == "ok" for s in spans)]
+    assert len(doc_traces) == 1
+    names = [s.name for s in doc_traces[0]]
+    for plane_span in ("ingest.fetch", "pipeline.process", "store.append",
+                       "delivery.write"):
+        assert plane_span in names, f"missing {plane_span} in {names}"
+    assert len({s.trace_id for s in doc_traces[0]}) == 1
+    p.close()
+
+
+def test_trace_export_dir_persists_spans(tmp_path):
+    export = str(tmp_path / "traces")
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=0, trace_sample_rate=1.0,
+                       trace_export_dir=export), seed=0)
+    sid = p.add_source("news", connector="push")
+    p.push(sid, [{"title": "t", "body": "b", "published_at": 1.0}])
+    p.run_for(30)
+    p.close()
+    exported = list(p.tracer.exporter.scan())
+    assert any(s["name"] == "delivery.write" for s in exported)
+
+
+def test_metrics_series_ring_is_bounded():
+    m = Metrics(history=4)
+    for i in range(10):
+        m.sent.append((float(i), 1))
+    assert len(m.sent) == 4
+    assert list(m.sent)[0] == (6.0, 1)       # oldest dropped, newest kept
+    # pipeline wires the config bound through
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=5, metrics_history=3), seed=0)
+    p.run_for(1200)
+    assert len(p.metrics.sent) <= 3
+    assert len(p.metrics.received) <= 3
+    # unbounded stays a plain list (seed behaviour)
+    assert isinstance(Metrics().sent, list)
+
+
+def test_connector_stats_is_registry_view():
+    """Satellite: the old dict-of-dicts is gone; connector_stats() is
+    assembled from the registry counters and keeps its exact shape."""
+    p = AlertMixPipeline(PipelineConfig(num_sources=20), seed=1)
+    p.run_for(600)
+    st = p.connector_stats()
+    assert set(st) == {"sim"}
+    assert set(st["sim"]) == {"fetches", "items", "not_modified", "errors",
+                              "backoffs", "deferred_s"}
+    reg = p.obs.metrics
+    assert st["sim"]["fetches"] == reg.counter(
+        "ingest_fetches_total").value(connector="sim")
+    assert st["sim"]["items"] == reg.counter(
+        "ingest_items_total").value(connector="sim")
+    assert not hasattr(p, "_connector_stats")
+    assert not hasattr(p, "_cstats_lock")
+    # the fetch-latency histogram saw every fetch
+    assert reg.histogram("ingest_fetch_seconds").count(
+        connector="sim") == st["sim"]["fetches"]
+
+
+def test_pipeline_exposition_covers_every_plane():
+    p = AlertMixPipeline(PipelineConfig(num_sources=10), seed=0)
+    p.run_for(600)
+    text = p.metrics_text()
+    for name in ("ingest_fetches_total", "docs_indexed_total",
+                 "delivery_emitted_total", "delivery_lag",
+                 "scheduler_picked_total", "pool_size",
+                 "dead_letters_total", "trace_flight_spans"):
+        assert f"# TYPE {name} " in text, f"missing {name}"
+    json.dumps(p.metrics_snapshot())
+
+
+def test_selfmon_dead_letter_flood_fires_health_alert():
+    """Acceptance: an injected dead-letter flood fires a __health__
+    alert through the ordinary rule engine."""
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=0, selfmon_interval_s=60.0,
+                       allowed_lateness_s=0.0, watermark_lag_s=0.0,
+                       selfmon_dead_letter_threshold=50.0), seed=0)
+    for i in range(200):
+        p.dead_letters.publish({"i": i}, reason="malformed_item")
+    p.run_for(1500)
+    fired = [a for a in p.alerts if a.rule == "selfmon_dead_letter_flood"]
+    assert fired, f"no flood alert; fired={[a.rule for a in p.alerts]}"
+    assert fired[0].key == "__health__.dead_letters_total.malformed_item"
+    assert fired[0].value >= 50.0
+    assert p.obs_status()["selfmon"]["samples"] > 0
+
+
+def test_selfmon_counters_publish_deltas_not_totals():
+    from repro.obs.selfmon import MetricsConnector
+
+    reg = MetricsRegistry()
+    reg.counter("x_total").inc(10)
+    conn = MetricsConnector(reg, include=["x_total"])
+    first = conn.fetch(None, None, 0.0)
+    assert first.items[0].extra["value"] == 10.0
+    conn.fetch(None, None, 1.0)      # no growth -> zero delta
+    reg.counter("x_total").inc(3)
+    third = conn.fetch(None, None, 2.0)
+    assert third.items[0].extra["value"] == 3.0
+    assert third.items[0].extra["key"] == "__health__.x_total"
+
+
+def test_selfmon_rules_scoped_off_product_channels():
+    """Health rules never fire on product keys and product rules never
+    fire on __health__ keys (key_prefix scoping)."""
+    from repro.alerts import ThresholdRule
+
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=0, selfmon_interval_s=60.0,
+                       allowed_lateness_s=0.0, watermark_lag_s=0.0),
+        seed=0,
+        analytics_rules=[ThresholdRule("product_vol", metric="count",
+                                       op=">=", threshold=1.0,
+                                       key_prefix="news")])
+    sid = p.add_source("news", connector="push")
+    p.push(sid, [{"title": "t", "body": "b", "published_at": 100.0}])
+    p.run_for(1200)
+    by_rule = {}
+    for a in p.alerts:
+        by_rule.setdefault(a.rule, []).append(a.key)
+    assert all(k.startswith("news") for k in by_rule.get("product_vol", []))
+    for rule, keys in by_rule.items():
+        if rule.startswith("selfmon_"):
+            assert all(k.startswith("__health__.") for k in keys)
+
+
+def test_replay_status_reports_stage_profile(tmp_path):
+    """Acceptance: replay_status() itemizes the batch chain per stage."""
+    from repro.alerts import AnalyticsStage, ThresholdRule, WindowSpec
+    from repro.store import ReplayEngine
+
+    stage = AnalyticsStage(
+        WindowSpec(kind="tumbling", size_s=60.0),
+        [ThresholdRule("vol", metric="count", op=">=", threshold=1.0)])
+    eng = ReplayEngine(analytics=stage)
+    eng.replay_events([("news", 10.0, 1.0), ("news", 20.0, 2.0)],
+                      watermark=1e9)
+    prof = eng.status()["profile"]
+    for stage_name in ("pack_events", "kernel", "unpack", "state_merge"):
+        assert stage_name in prof, f"missing stage {stage_name}"
+        assert prof[stage_name]["calls"] == 1
+        assert prof[stage_name]["total_ms"] >= 0.0
+    assert sum(s["share"] for s in prof.values()) == pytest.approx(1.0)
+    # the pipeline surface carries it too
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=0, store_dir=str(tmp_path / "s")),
+        seed=0)
+    assert "profile" in p.replay_status()
+    p.close()
+
+
+def test_rule_engine_add_rule_rejects_duplicates():
+    from repro.alerts import RuleEngine, ThresholdRule
+
+    eng = RuleEngine([ThresholdRule("a")])
+    eng.add_rule(ThresholdRule("b"))
+    with pytest.raises(ValueError):
+        eng.add_rule(ThresholdRule("a"))
+
+
+def test_observability_bundle_status_and_close(tmp_path):
+    obs = Observability(sample_rate=1.0, export_dir=str(tmp_path / "t"))
+    with obs.tracer.span("w"):
+        pass
+    st = obs.status()
+    assert st["tracer"]["sampled_traces"] == 1
+    assert isinstance(st["metrics"], tuple)
+    obs.close()

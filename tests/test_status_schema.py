@@ -1,0 +1,115 @@
+"""Status-surface schema stability: the exact key sets of the operator
+surfaces — ``delivery_status()`` / ``ingest_status()`` /
+``replay_status()`` on the serving tier, the pipeline's stats views
+underneath them, and the metrics registry ``snapshot()`` — are part of
+the platform's contract (dashboards and the self-monitoring connector
+parse them).  A key added or dropped must be a deliberate change HERE,
+not an accident."""
+import jax
+import pytest
+
+from repro.config import ServeConfig
+from repro.configs import get_arch
+from repro.core.pipeline import AlertMixPipeline, PipelineConfig
+from repro.models.model import build_model
+from repro.models.param import init_params
+from repro.serve.engine import ServeEngine
+
+BACKEND_KEYS = {"emitted", "retried", "dead_lettered", "pending_retry",
+                "lag", "healthy"}
+DISPATCH_EXTRA = {"queue_depth", "dropped", "handoff_p50_ms",
+                  "handoff_p99_ms"}
+CONNECTOR_KEYS = {"fetches", "items", "not_modified", "errors", "backoffs",
+                  "deferred_s"}
+
+
+@pytest.fixture(scope="module")
+def engine_with_pipeline(tmp_path_factory):
+    cfg = get_arch("qwen2_5_3b").smoke
+    model = build_model(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    pipe = AlertMixPipeline(
+        PipelineConfig(num_sources=10,
+                       store_dir=str(tmp_path_factory.mktemp("store")),
+                       selfmon_interval_s=300.0),
+        seed=0)
+    pipe.run_for(600)
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_batch=2, max_seq_len=64),
+                      eos_id=-1, ingest=pipe, store=pipe.store)
+    return eng, pipe
+
+
+def test_delivery_status_schema(engine_with_pipeline):
+    eng, _ = engine_with_pipeline
+    st = eng.delivery_status()
+    assert set(st) == {"enabled", "emitted", "pending", "backends"}
+    for backend in st["backends"].values():
+        assert set(backend) == BACKEND_KEYS
+
+
+def test_delivery_status_schema_under_dispatch():
+    pipe = AlertMixPipeline(
+        PipelineConfig(num_sources=5, delivery_dispatch=True), seed=0)
+    try:
+        pipe.run_for(300)
+        st = pipe.delivery_stats()
+        for backend in st["backends"].values():
+            assert set(backend) == BACKEND_KEYS | DISPATCH_EXTRA
+    finally:
+        pipe.close()
+
+
+def test_ingest_status_schema(engine_with_pipeline):
+    eng, _ = engine_with_pipeline
+    st = eng.ingest_status()
+    assert set(st) == {"enabled", "channels", "connectors", "sources",
+                       "registry_shards", "picked_total", "requeued_total",
+                       "unroutable", "connector_stats"}
+    for per_connector in st["connector_stats"].values():
+        assert set(per_connector) == CONNECTOR_KEYS
+
+
+def test_replay_status_schema(engine_with_pipeline):
+    _, pipe = engine_with_pipeline
+    st = pipe.replay_status()
+    assert set(st) == {"enabled", "stats", "profile", "journal", "pending",
+                       "log"}
+    assert set(st["stats"]) == {"replays", "replayed_records", "deduped",
+                                "failed_batches", "events_replayed",
+                                "aggregates", "alerts"}
+    for stage in st["profile"].values():
+        assert set(stage) == {"calls", "total_ms", "mean_ms", "max_ms",
+                              "last_ms", "share"}
+    # storeless pipelines report only the flag
+    bare = AlertMixPipeline(PipelineConfig(num_sources=0), seed=0)
+    assert bare.replay_status() == {"enabled": False}
+
+
+def test_registry_snapshot_schema(engine_with_pipeline):
+    _, pipe = engine_with_pipeline
+    snap = pipe.metrics_snapshot()
+    assert set(snap) == {"counters", "gauges", "histograms"}
+    for group in ("counters", "gauges"):
+        for entry in snap[group].values():
+            assert set(entry) == {"help", "series"}
+            for series in entry["series"]:
+                assert set(series) == {"labels", "value"}
+    for entry in snap["histograms"].values():
+        assert set(entry) == {"help", "series"}
+        for series in entry["series"]:
+            assert set(series) == {"labels", "count", "sum", "min", "max",
+                                   "p50", "p99"}
+
+
+def test_obs_status_schema(engine_with_pipeline):
+    eng, pipe = engine_with_pipeline
+    st = eng.obs_status()
+    assert set(st) == {"enabled", "tracer", "metrics", "selfmon"}
+    assert set(st["tracer"]) == {"sample_rate", "started_traces",
+                                 "sampled_traces", "finished_spans",
+                                 "flight_spans", "capacity"}
+    assert set(st["selfmon"]) == {"sid", "samples"}
+    # every Metrics.ingest/delivery/store snapshot stays parseable
+    pipe.flush_delivery()
+    assert set(pipe.metrics.ingest) == set(pipe.connector_stats())
