@@ -18,6 +18,10 @@
                     rate 1.0 vs off (<=10% asserted), exposition scrape
                     cost, JSONL span-export rate (writes BENCH_obs.json
                     + a sample trace in BENCH_obs_trace.jsonl)
+  bench_query     — query/serving plane: cached vs recomputed query
+                    throughput (>=100x asserted), queries/s under
+                    1/16/64 async subscribers at the staleness bound,
+                    cold-range replay parity (writes BENCH_query.json)
   bench_scaling   — source-count scaling + resizer ablation
   bench_serving   — continuous vs static batching (FeedRouter admission)
   bench_train     — CPU train-step throughput per model family
@@ -39,6 +43,7 @@ def main() -> None:
         bench_delivery,
         bench_ingest,
         bench_obs,
+        bench_query,
         bench_roofline,
         bench_scaling,
         bench_serving,
@@ -49,7 +54,8 @@ def main() -> None:
     rows: list = []
     failures = 0
     for mod in (bench_alertmix, bench_ingest, bench_alerts, bench_delivery,
-                bench_store, bench_obs, bench_scaling, bench_serving,
+                bench_store, bench_obs, bench_query, bench_scaling,
+                bench_serving,
                 bench_train, bench_roofline):
         try:
             mod.main(rows)

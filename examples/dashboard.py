@@ -1,0 +1,95 @@
+"""A live dashboard over the query plane (``repro.query``).
+
+The pipeline materializes per-(channel, key, window) aggregates as
+windows close; this example plays the dashboard client against that
+state: one-shot declarative ``AggQuery``s (re-bucketed to coarse
+granularity, cache-accelerated), an ``async for`` watch that streams a
+fresh answer every time the store advances, and an ``async for`` alert
+subscription — all on ONE event loop with zero threads per subscriber.
+Every answer is asserted fresher than the configured staleness bound.
+
+  PYTHONPATH=src python examples/dashboard.py
+"""
+import asyncio
+import threading
+
+from repro.alerts import ThresholdRule
+from repro.core import AlertMixPipeline, PipelineConfig
+from repro.query import AggQuery
+
+STALENESS_S = 900.0
+
+
+def main() -> None:
+    rules = [ThresholdRule("volume", metric="count", op=">=", threshold=5.0)]
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=1500, feed_interval_s=300.0,
+                       analytics=True, query=True, window_size_s=60.0,
+                       query_staleness_s=STALENESS_S),
+        seed=0, analytics_rules=rules)
+    p.run_for(1800.0, dt=5.0)            # half an hour of virtual traffic
+
+    # ---- 1. one-shot panels: declarative queries over hot segments ----
+    per_5min = p.query.query(AggQuery(channel="news", start=0.0, end=1800.0,
+                                      agg="rate", granularity=300.0))
+    print("news arrival rate, 5-minute buckets:")
+    for pt in per_5min.points:
+        bar = "#" * int(pt["value"] * 20)
+        print(f"  t={pt['start']:6.0f}  {pt['value']:5.2f}/s {bar}")
+    assert per_5min.source == "hot" and per_5min.points
+
+    again = p.query.query(per_5min.query)      # identical panel refresh
+    assert again.cached and again.points == per_5min.points
+
+    # ---- 2. live widgets: async watch + alert stream, one loop --------
+    threads_before = threading.active_count()
+
+    async def dashboard():
+        updates, fired = [], []
+
+        async def rate_widget():
+            q = AggQuery(channel="twitter", start=0.0, end=1e9,
+                         agg="rate", granularity=600.0)
+            async for res in p.query.watch(q, max_updates=3):
+                updates.append(res)
+                print(f"  WATCH as_of={res.as_of:6.0f} "
+                      f"buckets={len(res.points)}")
+
+        async def alert_widget():
+            async for a in p.analytics.hub.async_iter("volume"):
+                fired.append(a)
+                print(f"  ALERT [{a.severity}] {a.message}")
+                if len(fired) >= 3:
+                    return
+
+        tasks = [asyncio.create_task(rate_widget()),
+                 asyncio.create_task(alert_widget())]
+        await asyncio.sleep(0)
+        threads_during = threading.active_count()
+        while not all(t.done() for t in tasks):
+            p.step(5.0)                  # traffic keeps flowing
+            await asyncio.sleep(0)       # widgets wake on store/alert events
+        await asyncio.gather(*tasks)
+        return updates, fired, threads_during
+
+    updates, fired, threads_during = asyncio.run(dashboard())
+    print(f"\nwatch updates={len(updates)} alerts={len(fired)} "
+          f"threads_added={threads_during - threads_before}")
+
+    # asserted invariants: widgets streamed, answers stayed inside the
+    # staleness bound, and no subscriber cost a thread
+    assert len(updates) == 3 and len(fired) >= 3
+    assert updates[0].as_of < updates[-1].as_of       # monotone freshness
+    assert all(p.now - u.as_of <= STALENESS_S for u in updates)
+    assert threads_during == threads_before == threading.active_count()
+
+    st = p.query.status()
+    print(f"query plane: queries={st['queries']} cache_hits="
+          f"{st['cache_hits']} hot_segments={st['hot_segments']}")
+    assert st["cache_hits"] >= 1 and st["stale_rejected"] == 0
+    p.close()
+    print("dashboard OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,10 +49,11 @@ class AnalyticsStage:
                  time_fn: Optional[Callable[[dict], float]] = None,
                  watermark_lag_s: float = 0.0,
                  dead_letters=None,
-                 alert_hook: Optional[Callable[[Alert], None]] = None):
+                 alert_hook: Optional[Callable[[Alert], None]] = None,
+                 alerts_keep_last: int = 10_000):
         self.operator = WindowOperator(
             spec, watermark_lag_s=watermark_lag_s, dead_letters=dead_letters)
-        self.sink = AlertSink(hook=alert_hook)
+        self.sink = AlertSink(hook=alert_hook, keep_last=alerts_keep_last)
         self.engine = RuleEngine(rules, sink=self.sink)
         self.key_fn = key_fn or (lambda doc: str(doc.get("channel", "all")))
         self.value_fn = value_fn or (lambda doc: 1.0)
@@ -61,10 +62,31 @@ class AnalyticsStage:
         # optional repro.obs.Tracer: when set, rule evaluation over
         # closed windows records a rules.eval span (pipeline mounts it)
         self.tracer = None
+        # export hooks: fn(closed_windows, watermark), called on EVERY
+        # advance — even watermark-only ticks, so downstream consumers
+        # (the repro.query materialized store) track freshness without
+        # waiting for the next window to close
+        self._exports: List[Callable[[List[WindowAggregate], float], None]] = []
 
     def observe(self, doc: dict, *, now: float = 0.0) -> bool:
         return self.operator.observe(
             self.key_fn(doc), self.time_fn(doc), self.value_fn(doc), now=now)
+
+    def add_export(self,
+                   fn: Callable[[List[WindowAggregate], float], None]) -> None:
+        """Register a closed-window export hook (e.g. a materialized
+        store).  Hooks see every closed window exactly once plus every
+        watermark advance (possibly with an empty window list)."""
+        self._exports.append(fn)
+
+    def export_closed(self, closed: List[WindowAggregate],
+                      watermark: Optional[float] = None) -> None:
+        """Feed ``closed`` windows to every export hook.  Also the entry
+        point for batch/replay paths (repro.store.ReplayEngine) whose
+        aggregates bypass ``advance``."""
+        wm = self.operator.watermark if watermark is None else watermark
+        for fn in self._exports:
+            fn(closed, wm)
 
     def advance(self, now: float) -> List[Alert]:
         """Advance the watermark to the pipeline's virtual clock, close
@@ -72,15 +94,18 @@ class AnalyticsStage:
         self.operator.advance_watermark(now)
         closed = self.operator.poll_closed()
         self.closed_total += len(closed)
-        if not closed:
-            return []
-        if self.tracer is not None:
-            with self.tracer.span("rules.eval",
-                                  attrs={"windows": len(closed)}) as sp:
+        fired: List[Alert] = []
+        if closed:
+            if self.tracer is not None:
+                with self.tracer.span("rules.eval",
+                                      attrs={"windows": len(closed)}) as sp:
+                    fired = self.engine.process(closed)
+                    sp.set("alerts", len(fired))
+            else:
                 fired = self.engine.process(closed)
-                sp.set("alerts", len(fired))
-            return fired
-        return self.engine.process(closed)
+        if self._exports:
+            self.export_closed(closed)
+        return fired
 
     def subscribe(self, callback=None, *, capacity: int = 256, key_fn=None):
         """Stream alerts as they fire (push, not poll): callback mode or

@@ -56,12 +56,19 @@ _NULL_STAGE = _NullStage()
 
 
 def reduce_events(events: Sequence[Event], spec: WindowSpec, *,
-                  interpret=None, profiler=None) -> List[WindowAggregate]:
+                  interpret=None, profiler=None,
+                  with_min: bool = False) -> List[WindowAggregate]:
     """One kernel launch -> WindowAggregates for every touched slot.
 
     ``profiler`` (a ``repro.obs.StageProfiler``) itemizes the chain into
     pack_events / kernel / unpack stages — the breakdown ROADMAP item 1
-    (the replay-vs-live gap) needs."""
+    (the replay-vs-live gap) needs.
+
+    ``with_min=True`` adds a second launch over the negated values —
+    ``min(v) = -max(-v)`` — so per-slot minima come out of the same
+    4-lane kernel without changing its pinned (S, 4) output shape.  The
+    query plane (repro.query) needs min; the rule engine's live path
+    already tracks it incrementally."""
     from repro.kernels import ops   # lazy: keep host path jax-free
 
     stage = profiler.stage if profiler is not None else (
@@ -73,13 +80,21 @@ def reduce_events(events: Sequence[Event], spec: WindowSpec, *,
     with stage("kernel"):
         lanes = np.asarray(ops.window_reduce(
             values, seg_ids, len(slots), interpret=interpret))
+        mins = None
+        if with_min:
+            neg = np.asarray(ops.window_reduce(
+                -values, seg_ids, len(slots), interpret=interpret))
+            mins = -neg[:, 3]
     with stage("unpack"):
         out: List[WindowAggregate] = []
         for sid, (key, start, end) in enumerate(slots):
             cnt, sm, sq, mx = lanes[sid]
-            out.append(WindowAggregate(
+            agg = WindowAggregate(
                 key=key, window_start=start, window_end=end,
                 count=int(round(cnt)), sum=float(sm), sumsq=float(sq),
-                max=float(mx)))
+                max=float(mx))
+            if mins is not None:
+                agg.min = float(mins[sid])
+            out.append(agg)
         out.sort(key=lambda a: (a.window_end, a.key))
     return out

@@ -31,7 +31,7 @@ _OPS: Dict[str, Callable[[float, float], bool]] = {
     "<": operator.lt, "<=": operator.le,
 }
 
-METRICS = ("count", "sum", "mean", "max", "variance")
+METRICS = ("count", "sum", "mean", "max", "min", "variance")
 
 
 def _metric(agg: WindowAggregate, name: str) -> float:

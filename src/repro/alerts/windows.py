@@ -91,6 +91,8 @@ class WindowAggregate:
     max: float = float("-inf")
     first_seen_at: float = 0.0           # processing (virtual) time
     closed_at_watermark: float = 0.0     # stamped at close
+    # declared last so older positional constructions stay valid
+    min: float = float("inf")
 
     @property
     def mean(self) -> float:
@@ -108,6 +110,8 @@ class WindowAggregate:
         self.sumsq += value * value
         if value > self.max:
             self.max = value
+        if value < self.min:
+            self.min = value
 
     def merge(self, other: "WindowAggregate") -> None:
         self.window_start = min(self.window_start, other.window_start)
@@ -116,6 +120,7 @@ class WindowAggregate:
         self.sum += other.sum
         self.sumsq += other.sumsq
         self.max = max(self.max, other.max)
+        self.min = min(self.min, other.min)
         self.first_seen_at = min(self.first_seen_at, other.first_seen_at)
 
 

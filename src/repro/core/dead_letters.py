@@ -38,7 +38,9 @@ REASON_FAMILIES = ("mailbox_overflow", "malformed_item", "late_event",
                    "unknown_connector",     # source names no registered one
                    "unknown_channel",       # picked for an unopened channel
                    "push_overflow",         # PushConnector buffer bound hit
-                   "push_source_removed")   # buffered docs of a removed source
+                   "push_source_removed",   # buffered docs of a removed source
+                   # query/serving plane (repro.query)
+                   "query_stale")           # watermark lagged past the bound
 
 
 def reason_in_taxonomy(reason: str) -> bool:

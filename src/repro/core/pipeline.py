@@ -106,6 +106,20 @@ class PipelineConfig:
     # feed_interval_s later, which is event-time lateness by construction
     allowed_lateness_s: float = 300.0  # late events within this still count
     watermark_lag_s: float = 60.0      # bounded out-of-orderness
+    alerts_history: int = 10_000       # AlertSink retention: fired_alerts()
+                                       # keeps the newest N (by_rule totals
+                                       # stay complete), so long soaks hold
+                                       # steady memory — the alert-side
+                                       # mirror of metrics_history
+    # ---- query/serving plane (repro.query) ---------------------------------
+    query: bool = False                # mount the materialized-aggregate
+                                       # query plane (implies analytics)
+    query_staleness_s: Optional[float] = 900.0  # refuse queries when the
+                                       # serving watermark lags now by
+                                       # more than this (None = never)
+    query_cache_entries: int = 1024    # watermark-invalidated result cache
+    query_max_windows_per_key: int = 4096  # hot retention per key; older
+                                       # windows answer via EventLog replay
     # ---- delivery layer (repro.delivery) -----------------------------------
     delivery_batch: int = 16           # records per backend write (1 = sync)
     delivery_max_delay_s: float = 5.0  # virtual-time bound on buffering
@@ -195,6 +209,10 @@ class Metrics:
     # per-connector ingress counters, refreshed with delivery:
     # {connector: fetches/items/not_modified/errors/backoffs/deferred_s}
     ingest: dict = field(default_factory=dict)
+    # query-plane counters (repro.query), refreshed with delivery:
+    # queries/cache hits+misses/stale rejections/cold scans + store
+    # segment/watermark state (empty dict when the plane is off)
+    query: dict = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if self.history:
@@ -342,7 +360,7 @@ class AlertMixPipeline:
         # stream carries metric series; the pipeline's virtual clock
         # drives the watermark; late events -> dead letters
         self.analytics = None
-        if (cfg.analytics or analytics_rules is not None
+        if (cfg.analytics or cfg.query or analytics_rules is not None
                 or cfg.selfmon_interval_s is not None):
             from repro.alerts import AnalyticsStage, ThresholdRule, WindowSpec
             if analytics_rules is not None:
@@ -351,7 +369,7 @@ class AlertMixPipeline:
                 rules = [ThresholdRule("volume_spike", metric="count",
                                        op=">=", threshold=50.0)]
             else:
-                rules = []      # self-monitoring only: health rules below
+                rules = []      # self-monitoring/query only: no product rules
             self.analytics = AnalyticsStage(
                 WindowSpec(kind=cfg.window_kind, size_s=cfg.window_size_s,
                            allowed_lateness_s=cfg.allowed_lateness_s),
@@ -360,8 +378,25 @@ class AlertMixPipeline:
                 dead_letters=self.dead_letters,
                 key_fn=lambda doc: str(doc.get("key",
                                                doc.get("channel", "all"))),
-                value_fn=lambda doc: float(doc.get("value", 1.0)))
+                value_fn=lambda doc: float(doc.get("value", 1.0)),
+                alerts_keep_last=cfg.alerts_history)
             self.analytics.tracer = self.tracer
+        # ---- query/serving plane (repro.query): closed windows fold into
+        # materialized per-(key, window) segments via the analytics export
+        # hook; queries below the retention floor replay the EventLog
+        # through the Pallas batch path (when a store plane is mounted)
+        self.query = None
+        if cfg.query:
+            from repro.query import QueryPlane
+            self.query = QueryPlane(
+                self.analytics,
+                log=None if self.store is None else self.store.log,
+                staleness_s=cfg.query_staleness_s,
+                cache_entries=cfg.query_cache_entries,
+                max_windows_per_key=cfg.query_max_windows_per_key,
+                clock=lambda: self.now,
+                dead_letters=self.dead_letters,
+                tracer=self.tracer if self.tracer.enabled else None)
         if self.store is not None:
             # the replay engine aggregates through the SAME rule-engine
             # state the live WindowOperator feeds (batch/live unification)
@@ -759,6 +794,21 @@ class AlertMixPipeline:
         taken at the last ``flush_delivery``."""
         return {} if self.store is None else self.store.status()
 
+    # ---- query/serving plane (repro.query) ----------------------------------
+    def query_stats(self) -> dict:
+        """Live query-plane counters (queries, cache hits/misses, stale
+        rejections, cold scans, hot segment/watermark state);
+        ``Metrics.query`` holds the snapshot taken at the last
+        ``flush_delivery``."""
+        return {} if self.query is None else self.query.status()
+
+    def query_status(self) -> dict:
+        """Query-plane status (``{"enabled": False}`` when
+        ``cfg.query`` is off)."""
+        if self.query is None:
+            return {"enabled": False}
+        return {"enabled": True, **self.query.status()}
+
     def close(self) -> None:
         """Flush delivery and close the durability plane (fsyncs the
         active log segments so a reopen sees every appended record) and
@@ -797,6 +847,7 @@ class AlertMixPipeline:
         self.metrics.delivery = self.delivery_stats()
         self.metrics.store = self.store_stats()
         self.metrics.ingest = self.connector_stats()
+        self.metrics.query = self.query_stats()
 
     def connector_stats(self) -> dict:
         """Live per-connector ingress counters: fetches, items,
@@ -904,6 +955,27 @@ class AlertMixPipeline:
             g("store_pending_replay_records",
               "journaled records awaiting replay").set(
                 st["pending_replay_records"])
+        if self.query is not None:
+            qs = self.query.status()
+            c("query_queries_total",
+              "aggregate queries answered or refused").sync(qs["queries"])
+            c("query_cache_hits_total",
+              "queries served from the watermark-invalidated cache").sync(
+                qs["cache_hits"])
+            c("query_cache_misses_total",
+              "queries that recomputed their aggregation").sync(
+                qs["cache_misses"])
+            c("query_stale_rejected_total",
+              "queries refused for exceeding the staleness bound").sync(
+                qs["stale_rejected"])
+            c("query_cold_scans_total",
+              "queries that replayed the event log for cold ranges").sync(
+                qs["cold_scans"])
+            g("query_hot_segments",
+              "materialized (key, window) aggregate segments").set(
+                qs["hot_segments"])
+            g("query_cache_entries", "live result-cache entries").set(
+                qs["cache_entries"])
         ts = self.tracer.status()
         g("trace_flight_spans",
           "finished spans retained in the flight recorder").set(

@@ -18,9 +18,17 @@ Long-poll: ``Subscription.wait(timeout)`` blocks (condition variable,
 no spinning) until the next record or the timeout; ``hub.wait(timeout)``
 is the one-shot form — the blocking-GET primitive a remote serving
 client needs to wait on the next alert.
+
+Asyncio: an iterator-mode ``Subscription`` is also an async iterator
+(``async for rec in sub``), and ``hub.async_iter(rule)`` filters one
+rule's records — both are event-driven bridges over the same buffers
+(``loop.call_soon_threadsafe`` wakes the consumer), so a thousand
+dashboard subscribers cost a thousand coroutines, not a thousand
+threads.
 """
 from __future__ import annotations
 
+import asyncio
 import collections
 import threading
 import time
@@ -56,6 +64,11 @@ class Subscription:
         # a Condition so wait() can block for the next push; `with` takes
         # the underlying lock, keeping every existing critical section
         self._lock = threading.Condition()
+        # asyncio bridge (bound lazily by the first __anext__): the
+        # producer thread wakes the consumer's event loop with
+        # call_soon_threadsafe — one coroutine per subscriber, no thread
+        self._aio_loop: Optional[asyncio.AbstractEventLoop] = None
+        self._aio_event: Optional[asyncio.Event] = None
 
     # ---- producer side (hub only) -----------------------------------------
     def _push(self, record) -> None:
@@ -88,6 +101,7 @@ class Subscription:
             self._order.append(key)
             self.delivered += 1
             self._lock.notify_all()      # wake long-poll waiters
+            self._signal_async()         # ...and async iterators
 
     # ---- consumer side -----------------------------------------------------
     def pop(self):
@@ -140,6 +154,49 @@ class Subscription:
                 return
             yield rec
 
+    # ---- asyncio bridge ----------------------------------------------------
+    def _signal_async(self) -> None:
+        """Wake the async consumer (if any) from the producer thread.
+        Called with self._lock held; call_soon_threadsafe is the only
+        loop API that is safe from a foreign thread."""
+        loop, event = self._aio_loop, self._aio_event
+        if loop is not None and event is not None:
+            try:
+                loop.call_soon_threadsafe(event.set)
+            except RuntimeError:
+                pass                     # consumer's loop already closed
+
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self):
+        """Next record in arrival order, parking the coroutine (not a
+        thread) until the producer pushes one.  Ends on close()."""
+        if self.callback is not None:
+            raise RuntimeError(
+                "async iteration requires an iterator-mode subscription "
+                "(subscribe() without a callback)")
+        loop = asyncio.get_running_loop()
+        with self._lock:
+            if self._aio_loop is None:
+                self._aio_loop = loop
+                self._aio_event = asyncio.Event()
+            elif self._aio_loop is not loop:
+                raise RuntimeError(
+                    "subscription already bound to another event loop")
+            event = self._aio_event
+        while True:
+            # clear BEFORE pop: a push landing after the pop re-sets the
+            # event, so the classic lost-wakeup race cannot park us with
+            # a non-empty buffer
+            event.clear()
+            rec = self.pop()
+            if rec is not None:
+                return rec
+            if self.closed:
+                raise StopAsyncIteration
+            await event.wait()
+
     def __len__(self) -> int:
         with self._lock:
             return sum(len(b) for b in self._buffers.values())
@@ -151,6 +208,7 @@ class Subscription:
         with self._lock:
             self.closed = True
             self._lock.notify_all()      # release long-poll waiters
+            self._signal_async()         # ...and async iterators
         self.hub.unsubscribe(self)
 
     def __enter__(self):
@@ -196,6 +254,22 @@ class SubscriptionHub(Sink):
         without spinning."""
         with self.subscribe(capacity=1) as sub:
             return sub.wait(timeout)
+
+    async def async_iter(self, rule: Optional[str] = None, *,
+                         capacity: int = 256,
+                         key_fn: Optional[Callable[[object], str]] = None):
+        """``async for rec in hub.async_iter("volume_spike")`` — an
+        event-driven stream of this hub's records, optionally filtered
+        to one rule name.  Subscribes on entry, unsubscribes when the
+        consumer stops iterating; no thread per subscriber (the test
+        suite pins that)."""
+        sub = self.subscribe(capacity=capacity, key_fn=key_fn)
+        try:
+            async for rec in sub:
+                if rule is None or str(getattr(rec, "rule", "_")) == rule:
+                    yield rec
+        finally:
+            sub.close()
 
     def _write(self, batch: List) -> None:
         with self._subs_lock:

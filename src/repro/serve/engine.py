@@ -49,7 +49,7 @@ def _bucket(n: int, mult: int = 16) -> int:
 class ServeEngine:
     def __init__(self, model: BaseModel, params, cfg: ServeConfig,
                  *, eos_id: int = 2, clock: Callable[[], float] = time.monotonic,
-                 analytics=None, store=None, ingest=None):
+                 analytics=None, store=None, ingest=None, query=None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -63,6 +63,9 @@ class ServeEngine:
         # optional repro.store.StorePlane: journals this engine's dead
         # letters durably and exposes replay_status()
         self.store = store
+        # optional repro.query.QueryPlane (explicit, or inherited from the
+        # attached pipeline): the serving tier's aggregate-read surface
+        self._query = query
         self.dead_letters = DeadLettersListener(
             alert_hook=self._on_dead_letter_alert,
             journal=None if store is None else store.journal)
@@ -237,6 +240,12 @@ class ServeEngine:
         return self.alert_hub.subscribe(callback, capacity=capacity,
                                         key_fn=key_fn)
 
+    def iter_alerts(self, *, rule=None, capacity: int = 256):
+        """``async for alert in engine.iter_alerts()`` — the asyncio form
+        of ``subscribe_alerts``: event-driven, one coroutine (never a
+        thread) per consumer, optionally filtered to one rule name."""
+        return self.alert_hub.async_iter(rule, capacity=capacity)
+
     def fired_alerts(self) -> List:
         """POLL-COMPAT view (prefer ``subscribe_alerts``): every alert
         this engine has raised, as ``repro.alerts.Alert`` records:
@@ -258,6 +267,41 @@ class ServeEngine:
         if self.store is None:
             return {"enabled": False}
         return {"enabled": True, **self.store.replay.status()}
+
+    # ---- query/serving plane (repro.query) -----------------------------------
+    def _query_plane(self):
+        if self._query is not None:
+            return self._query
+        return getattr(self.ingest, "query", None)
+
+    def _require_query(self):
+        plane = self._query_plane()
+        if plane is None:
+            raise RuntimeError(
+                "no query plane attached: construct with "
+                "ServeEngine(..., query=<QueryPlane>) or attach a "
+                "pipeline built with PipelineConfig(query=True)")
+        return plane
+
+    def query(self, q, **kw):
+        """Answer an ``AggQuery`` against the attached query plane —
+        materialized hot segments, cold EventLog replay, result cache,
+        staleness gate (see repro.query)."""
+        return self._require_query().query(q, **kw)
+
+    def watch_query(self, q, **kw):
+        """``async for result in engine.watch_query(q)`` — re-evaluated
+        exactly when the materialized store changes; no polling."""
+        return self._require_query().watch(q, **kw)
+
+    def query_status(self) -> dict:
+        """Query-plane counters (queries, cache hits/misses, stale
+        rejections, cold scans, segment/watermark state), or
+        ``{"enabled": False}`` when no plane is attached."""
+        plane = self._query_plane()
+        if plane is None:
+            return {"enabled": False}
+        return {"enabled": True, **plane.status()}
 
     # ---- ingestion control surface (repro.ingest) ---------------------------
     # The serving tier is the operator's front door: when an ingestion

@@ -183,6 +183,13 @@ class ReplayEngine:
                 a.closed_at_watermark = wm
             with self.profiler.stage("state_merge"):
                 fired = self.analytics.engine.process(aggs)
+                # replayed windows bypass AnalyticsStage.advance, so feed
+                # the stage's export hooks (e.g. the repro.query
+                # materialized store) here — late backfill merges into
+                # serving state instead of silently diverging from it
+                export = getattr(self.analytics, "export_closed", None)
+                if export is not None:
+                    export(aggs, wm)
         with self._lock:
             self.stats["events_replayed"] += len(events)
             self.stats["aggregates"] += len(aggs)

@@ -21,6 +21,10 @@ DISPATCH_EXTRA = {"queue_depth", "dropped", "handoff_p50_ms",
                   "handoff_p99_ms"}
 CONNECTOR_KEYS = {"fetches", "items", "not_modified", "errors", "backoffs",
                   "deferred_s"}
+QUERY_KEYS = {"queries", "cache_hits", "cache_misses", "stale_rejected",
+              "cold_scans", "cold_events", "cache_entries", "staleness_s",
+              "hot_segments", "hot_keys", "watermark", "version", "floor",
+              "ingested_windows", "merged_windows", "evicted_windows"}
 
 
 @pytest.fixture(scope="module")
@@ -31,7 +35,7 @@ def engine_with_pipeline(tmp_path_factory):
     pipe = AlertMixPipeline(
         PipelineConfig(num_sources=10,
                        store_dir=str(tmp_path_factory.mktemp("store")),
-                       selfmon_interval_s=300.0),
+                       selfmon_interval_s=300.0, query=True),
         seed=0)
     pipe.run_for(600)
     eng = ServeEngine(model, params,
@@ -100,6 +104,22 @@ def test_registry_snapshot_schema(engine_with_pipeline):
         for series in entry["series"]:
             assert set(series) == {"labels", "count", "sum", "min", "max",
                                    "p50", "p99"}
+
+
+def test_query_status_schema(engine_with_pipeline):
+    """``ServeEngine.query_status()`` and ``Metrics.query`` pin the exact
+    query-plane key set (dashboards parse both)."""
+    eng, pipe = engine_with_pipeline
+    st = eng.query_status()
+    assert set(st) == {"enabled"} | QUERY_KEYS
+    assert st["enabled"] is True
+    assert pipe.query_status() == st
+    pipe.flush_delivery()
+    assert set(pipe.metrics.query) == QUERY_KEYS
+    # planeless engines/pipelines report only the flag
+    bare = AlertMixPipeline(PipelineConfig(num_sources=0), seed=0)
+    assert bare.query_status() == {"enabled": False}
+    assert bare.query_stats() == {}
 
 
 def test_obs_status_schema(engine_with_pipeline):
