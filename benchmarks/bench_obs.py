@@ -5,6 +5,10 @@ platform costs.
                        at 1.0 vs disabled (the bench_alertmix drive,
                        scaled down) — the acceptance bar is <= 10%
                        throughput loss, asserted below
+  latency overhead     the always-on latency/SLO plane: docs/s with
+                       ``latency_tracking`` on (trace sampling at 0,
+                       the production default) vs off — same <= 10%
+                       bar, asserted below
   exposition scrape    metrics_text() renders/sec and bytes per scrape
                        against a registry populated by a real run
                        (collectors included), plus json snapshot()/sec
@@ -38,14 +42,15 @@ OVERHEAD_BAR = 0.90
 
 def _drive(num_sources: int, virtual_s: float, *,
            sample_rate: float = 0.0, store: bool = False,
-           export_dir=None, selfmon=None) -> tuple:
+           export_dir=None, selfmon=None, latency: bool = True) -> tuple:
     """One bench_alertmix-shaped run; returns (docs_done, wall_s, pipe)."""
     d = tempfile.mkdtemp(prefix="bench_obs_") if store else None
     p = AlertMixPipeline(PipelineConfig(
         num_sources=num_sources, feed_interval_s=300.0,
         queue_capacity=max(200_000, num_sources * 2),
         trace_sample_rate=sample_rate, trace_export_dir=export_dir,
-        store_dir=d, selfmon_interval_s=selfmon), seed=0)
+        store_dir=d, selfmon_interval_s=selfmon,
+        latency_tracking=latency), seed=0)
     t0 = time.perf_counter()
     m = p.run_for(virtual_s, dt=5.0)
     wall = time.perf_counter() - t0
@@ -82,6 +87,37 @@ def bench_tracing_overhead(num_sources: int, virtual_s: float,
     return {"baseline_docs_s": best[0.0],
             "traced_docs_s": best[1.0],
             "ratio": best[1.0] / best[0.0], "docs": docs,
+            "rounds": rounds}
+
+
+def bench_latency_overhead(num_sources: int, virtual_s: float,
+                           repeats: int) -> dict:
+    """docs/s with the always-on latency/SLO plane on vs off, tracing
+    disabled in both modes (the production default is latency on +
+    sampling near 0, so THIS ratio is what every deployment pays).
+    Same interleaved best-per-mode protocol as
+    :func:`bench_tracing_overhead`."""
+    best = {False: 0.0, True: 0.0}       # per-mode docs/s floors
+    docs = rounds = 0
+    for _ in range(repeats):
+        for lat in (False, True):        # interleaved: share any drift
+            n, w, p, _ = _drive(num_sources, virtual_s, latency=lat)
+            snap = p.metrics_snapshot()
+            p.close()
+            best[lat] = max(best[lat], n / w)
+            docs = n
+            hist = snap["histograms"].get("e2e_latency_seconds")
+            if lat:                      # always-on even at rate 0
+                landed = sum(s["count"] for s in hist["series"])
+                assert landed > 0, "latency plane recorded no e2e samples"
+            else:
+                assert hist is None, "disabled latency plane left series"
+        rounds += 1
+        if best[True] / best[False] >= OVERHEAD_BAR:
+            break
+    return {"baseline_docs_s": best[False],
+            "tracked_docs_s": best[True],
+            "ratio": best[True] / best[False], "docs": docs,
             "rounds": rounds}
 
 
@@ -153,6 +189,14 @@ def main(rows, *, smoke: bool = False):
         f"base={ovh['baseline_docs_s']:,.0f}docs/s "
         f"ratio={ovh['ratio']:.3f}",
     ))
+    lat = bench_latency_overhead(srcs, vs, repeats)
+    rows.append((
+        "obs_latency_overhead",
+        1e6 / lat["tracked_docs_s"],             # us per tracked doc
+        f"tracked={lat['tracked_docs_s']:,.0f}docs/s "
+        f"base={lat['baseline_docs_s']:,.0f}docs/s "
+        f"ratio={lat['ratio']:.3f}",
+    ))
     expo = bench_exposition(srcs // 10, vs, scrapes)
     rows.append((
         "obs_exposition_scrape",
@@ -171,12 +215,16 @@ def main(rows, *, smoke: bool = False):
     # machine-readable results land BEFORE the regression asserts so a
     # failing bar still leaves the numbers behind for inspection
     with open("BENCH_obs.json", "w", encoding="utf-8") as fh:
-        json.dump({"tracing_overhead": ovh, "exposition": expo,
+        json.dump({"tracing_overhead": ovh, "latency_overhead": lat,
+                   "exposition": expo,
                    "trace_export": exp, "smoke": smoke}, fh, indent=2)
-    # THE acceptance bar: full-rate tracing keeps end-to-end docs/s
-    # within 10% of tracing-disabled
+    # THE acceptance bars: full-rate tracing keeps end-to-end docs/s
+    # within 10% of tracing-disabled, and the always-on latency/SLO
+    # plane (at sample rate 0) within 10% of latency-off
     assert ovh["ratio"] >= OVERHEAD_BAR, (
         f"tracing overhead exceeds 10%: ratio={ovh['ratio']:.3f}")
+    assert lat["ratio"] >= OVERHEAD_BAR, (
+        f"latency-plane overhead exceeds 10%: ratio={lat['ratio']:.3f}")
     assert exp["exported"] >= exp["spans"] > 0
     assert exp["sample_trace_spans"] > 0
     return rows

@@ -1,0 +1,148 @@
+"""Perf-trajectory regression gate.
+
+Every harness run (``python -m benchmarks.run``) appends one line to
+``BENCH_history.jsonl`` — a timestamped, flattened map of every scalar
+the benchmarks printed.  This module diffs the NEWEST entry against the
+previous one and exits nonzero when any shared metric regressed past a
+configurable threshold, so a perf cliff shows up in the trajectory the
+commit that introduced it, not three PRs later.
+
+  PYTHONPATH=src python -m benchmarks.compare                # gate
+  PYTHONPATH=src python -m benchmarks.compare --warn-only    # CI mode
+  PYTHONPATH=src python -m benchmarks.compare --collect      # append a
+      history entry scraped from the BENCH_*.json artifacts in cwd
+      (what the CI smoke steps leave behind) before comparing
+
+All benchmark scalars are us-per-call style — LOWER IS BETTER — so a
+regression is a positive relative delta.  Metrics present on only one
+side (a bench added or removed) are reported but never gate.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+import time
+
+HISTORY = "BENCH_history.jsonl"
+THRESHOLD = 0.25        # allow 25% run-to-run drift on shared CI boxes
+
+
+def flatten_scalars(obj, prefix: str = "") -> dict:
+    """``{"a": {"b": 2.0, "skip": "str"}} -> {"a.b": 2.0}`` — every
+    numeric leaf under dotted path keys, non-numeric leaves dropped."""
+    out: dict = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten_scalars(v, f"{prefix}{k}."))
+    elif isinstance(obj, bool):         # bool is an int; not a metric
+        pass
+    elif isinstance(obj, (int, float)):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def append_entry(metrics: dict, path: str = HISTORY, *,
+                 source: str = "run") -> dict:
+    """Append one history line; returns the entry written."""
+    entry = {"ts": time.time(), "source": source, "metrics": metrics}
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
+
+
+def collect_json_artifacts(pattern: str = "BENCH_*.json") -> dict:
+    """Flattened scalars from every BENCH_*.json in cwd, keyed
+    ``<plane>.<section>.<metric>`` (e.g. ``obs.latency_overhead.ratio``)."""
+    metrics: dict = {}
+    for path in sorted(glob.glob(pattern)):
+        plane = path[len("BENCH_"):-len(".json")]
+        with open(path, encoding="utf-8") as fh:
+            metrics.update(flatten_scalars(json.load(fh), f"{plane}."))
+    return metrics
+
+
+def load_history(path: str = HISTORY) -> list:
+    entries = []
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                entries.append(json.loads(line))
+    return entries
+
+
+def compare(prev: dict, curr: dict, threshold: float) -> tuple:
+    """Per-metric rows ``(name, prev, curr, rel_delta)`` (delta None
+    when the metric exists on one side only) + the regressed names."""
+    rows, regressions = [], []
+    for name in sorted(set(prev["metrics"]) | set(curr["metrics"])):
+        a = prev["metrics"].get(name)
+        b = curr["metrics"].get(name)
+        if a is None or b is None:
+            rows.append((name, a, b, None))
+            continue
+        delta = (b - a) / a if a else (0.0 if b == a else float("inf"))
+        rows.append((name, a, b, delta))
+        if delta > threshold:
+            regressions.append(name)
+    return rows, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--history", default=HISTORY)
+    ap.add_argument("--threshold", type=float, default=THRESHOLD,
+                    help="relative regression that fails the gate "
+                         f"(default {THRESHOLD:.0%})")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="print regressions but always exit 0")
+    ap.add_argument("--collect", action="store_true",
+                    help="first append an entry scraped from the "
+                         "BENCH_*.json artifacts in cwd")
+    args = ap.parse_args(argv)
+
+    if args.collect:
+        scraped = collect_json_artifacts()
+        if scraped:
+            append_entry(scraped, args.history, source="artifacts")
+            print(f"collected {len(scraped)} scalars from BENCH_*.json")
+        else:
+            print("no BENCH_*.json artifacts in cwd; nothing collected")
+
+    try:
+        entries = load_history(args.history)
+    except FileNotFoundError:
+        print(f"no history at {args.history}; nothing to compare")
+        return 0
+    if len(entries) < 2:
+        print("fewer than two runs in history; nothing to compare")
+        return 0
+
+    prev, curr = entries[-2], entries[-1]
+    rows, regressions = compare(prev, curr, args.threshold)
+    print(f"{'metric':<44} {'prev':>12} {'curr':>12} {'delta':>8}")
+    for name, a, b, delta in rows:
+        if delta is None:
+            state = "added" if a is None else "removed"
+            print(f"{name:<44} {a if a is not None else '-':>12} "
+                  f"{b if b is not None else '-':>12} {state:>8}")
+            continue
+        flag = "  <-- REGRESSED" if delta > args.threshold else ""
+        print(f"{name:<44} {a:>12.3f} {b:>12.3f} {delta:>+7.1%}{flag}")
+
+    if regressions:
+        verdict = (f"{len(regressions)} metric(s) regressed past "
+                   f"+{args.threshold:.0%}: {', '.join(regressions)}")
+        if args.warn_only:
+            print(f"WARN (gate disabled): {verdict}")
+            return 0
+        print(f"FAIL: {verdict}", file=sys.stderr)
+        return 1
+    print(f"OK: no metric regressed past +{args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

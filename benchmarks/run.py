@@ -15,9 +15,11 @@
                     profile shares, recovery-to-drain latency
                     (writes BENCH_store.json)
   bench_obs       — observability plane: tracing overhead at sample
-                    rate 1.0 vs off (<=10% asserted), exposition scrape
-                    cost, JSONL span-export rate (writes BENCH_obs.json
-                    + a sample trace in BENCH_obs_trace.jsonl)
+                    rate 1.0 vs off and always-on latency/SLO-plane
+                    overhead at rate 0 (both <=10% asserted),
+                    exposition scrape cost, JSONL span-export rate
+                    (writes BENCH_obs.json + a sample trace in
+                    BENCH_obs_trace.jsonl)
   bench_query     — query/serving plane: cached vs recomputed query
                     throughput (>=100x asserted), queries/s under
                     1/16/64 async subscribers at the staleness bound,
@@ -26,6 +28,10 @@
   bench_serving   — continuous vs static batching (FeedRouter admission)
   bench_train     — CPU train-step throughput per model family
   bench_roofline  — §Roofline table from the dry-run records
+
+Every full run also appends its flattened scalars to
+``BENCH_history.jsonl`` — ``python -m benchmarks.compare`` diffs the
+newest entry against the previous one (the perf-trajectory gate).
 
 Run everything:  PYTHONPATH=src python -m benchmarks.run
 One benchmark:   PYTHONPATH=src python -m benchmarks.bench_alertmix
@@ -66,6 +72,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")
+    # perf trajectory: one history line per harness run, appended even
+    # when a bench failed (partial rows still anchor the next diff)
+    from benchmarks.compare import append_entry
+    append_entry({name: us for name, us, _ in rows})
     if failures:
         raise SystemExit(1)
 

@@ -1,0 +1,94 @@
+"""Guarding the platform with SLOs: error budgets and burn-rate pages.
+
+Two pipelines, same declarative objectives, opposite fates.  The first
+runs healthy: every ``delivery.write`` lands well inside its latency
+objective, the error budget stays intact, nothing pages.  The second
+gets a stalled backend injected (every write sleeps 2ms against a 1ms
+objective): the budget burns, the Google-SRE fast window (5m + 1h at
+14.4x spend) trips, and the page arrives as a ``critical`` alert on the
+``__health__`` stream — through the SAME rule engine that handles
+product alerts, because watching the platform rides the platform.
+
+  PYTHONPATH=src python examples/slo_guard.py
+"""
+import time
+
+from repro.core import AlertMixPipeline, PipelineConfig
+from repro.delivery import CollectingSink
+from repro.obs import SLOSpec
+
+SLOS = [
+    # "99% of backend writes finish inside 1ms, judged over 1h"
+    SLOSpec("write-fast", "plane_latency", objective=0.001, target=0.99,
+            window=3600.0, labels={"plane": "delivery.write"}),
+    # "99.9% of records reach a backend instead of the dead-letter log"
+    SLOSpec("delivered", "delivery_success_ratio", target=0.999,
+            window=3600.0),
+]
+
+
+class StalledSink(CollectingSink):
+    """A backend whose every write takes 2ms — double the objective."""
+
+    def emit(self, batch):
+        time.sleep(0.002)
+        super().emit(batch)
+
+
+def drive(sink):
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=40, selfmon_interval_s=60.0,
+                       slos=SLOS),
+        seed=1, sinks=[sink])
+    p.run_for(1800.0)
+    return p
+
+
+def show(name, entry):
+    print(f"  {name:<10} budget={entry['budget_remaining']:+8.2f}  "
+          f"fast_burn={entry['fast_burn']:7.2f}  "
+          f"slow_burn={entry['slow_burn']:6.2f}  "
+          f"good={entry['good']:.0f} bad={entry['bad']:.0f}")
+
+
+def main():
+    # ---- 1. healthy: budget intact, no burn --------------------------
+    ok = drive(CollectingSink("es"))
+    st = ok.slo_status()
+    print("healthy backend:")
+    for name, entry in st["slos"].items():
+        show(name, entry)
+    assert st["burning_fast"] == [] and st["burning_slow"] == []
+    assert st["slos"]["write-fast"]["budget_remaining"] > 0.0
+    assert not any(a.rule.startswith("selfmon_slo_") for a in ok.alerts)
+    ok.close()
+
+    # ---- 2. stalled: the fast window burns, the page fires -----------
+    bad = drive(StalledSink("es"))
+    st = bad.slo_status()
+    print("stalled backend (2ms writes vs 1ms objective):")
+    for name, entry in st["slos"].items():
+        show(name, entry)
+    w = st["slos"]["write-fast"]
+    assert w["good"] == 0 and w["bad"] > 0       # every write blew the bar
+    assert w["budget_remaining"] < 0.0           # budget overspent
+    assert "write-fast" in st["burning_fast"]    # page-level burn rate
+
+    pages = [a for a in bad.alerts if a.rule == "selfmon_slo_fast_burn"]
+    assert pages, f"no page; fired={[a.rule for a in bad.alerts]}"
+    a = pages[0]
+    print(f"\npage: rule={a.rule} key={a.key} severity={a.severity} "
+          f"burn={a.value:.1f}x")
+    assert a.key == "__health__.slo_fast_burn.write-fast"
+    assert a.severity == "critical" and a.value >= 1.0
+
+    # the burn gauges are scrapeable, so external alerting sees them too
+    assert 'slo_fast_burn{slo="write-fast"}' in bad.metrics_text()
+    # ...while the healthy delivery SLO kept its budget through it all
+    assert st["slos"]["delivered"]["budget_remaining"] > 0.0
+    bad.close()
+    print("slo_guard OK")
+
+
+if __name__ == "__main__":
+    main()

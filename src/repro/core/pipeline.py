@@ -67,7 +67,7 @@ from repro.core.scheduler import DEFAULT_CHANNELS, ChannelDistributor, Scheduler
 from repro.core.sinks import IndexSink
 from repro.core.sources import NOT_MODIFIED, SourceSimulator
 from repro.delivery import BatchingSink, FanOutSink, RetryingSink, as_sink
-from repro.obs import Observability, TracingSink
+from repro.obs import LatencySink, Observability, TracingSink
 
 # repro.ingest imports repro.core.registry (which runs this package's
 # __init__) — import it lazily to keep `import repro.ingest` first legal
@@ -172,6 +172,21 @@ class PipelineConfig:
                                        # backend-lag anomaly)
     selfmon_dead_letter_threshold: float = 100.0  # flood rule bound
                                        # (dead letters per window)
+    # ---- latency & SLO plane (repro.obs.latency / repro.obs.slo) -----------
+    latency_tracking: bool = True      # always-on per-plane + end-to-end
+                                       # latency histograms, independent of
+                                       # trace_sample_rate (False exists for
+                                       # overhead baselines, not production)
+    slos: Optional[list] = None        # SLOSpec list; None/[] = no SLO
+                                       # engine mounted.  Burn gauges feed
+                                       # the selfmon loop when it is on, so
+                                       # violations fire as ordinary
+                                       # __health__ alerts
+    slo_sample_interval_s: float = 30.0  # virtual-clock cadence for sampled
+                                       # indicators (watermark lag, query
+                                       # staleness, delivery ratio) + burn
+                                       # gauge refresh + dispatcher
+                                       # queue-depth sampling
 
 
 @dataclass
@@ -213,6 +228,10 @@ class Metrics:
     # queries/cache hits+misses/stale rejections/cold scans + store
     # segment/watermark state (empty dict when the plane is off)
     query: dict = field(default_factory=dict)
+    # SLO-plane report (repro.obs.slo), refreshed with delivery: per-SLO
+    # good/bad counts, budget remaining, fast/slow burn rates, and the
+    # currently-burning sets (empty dict when no SLOs are configured)
+    slo: dict = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if self.history:
@@ -260,6 +279,30 @@ class AlertMixPipeline:
         self._m_fetch_seconds = reg.histogram(
             "ingest_fetch_seconds", "wall-clock connector fetch latency")
         reg.add_collector(self._sync_registry)
+        # ---- latency & SLO plane (repro.obs.latency / repro.obs.slo):
+        # always-on latency histograms — independent of trace sampling by
+        # design, so SLO measurement never depends on sample_rate — feed a
+        # declarative SLO engine doing multi-window burn-rate accounting
+        # on the virtual clock
+        self.slo = None
+        if cfg.slos:
+            from repro.obs.slo import SLOEngine
+            self.slo = SLOEngine(cfg.slos, reg,
+                                 sample_interval_s=cfg.slo_sample_interval_s)
+        self.latency = None
+        self._last_dispatch_sample = float("-inf")
+        if cfg.latency_tracking:
+            from repro.obs.latency import LatencyTracker
+            self.latency = LatencyTracker(reg, clock=lambda: self.now,
+                                          slo=self.slo)
+            self._h_dispatch_depth = reg.histogram(
+                "dispatch_queue_depth_sampled",
+                "hand-off queue depth per backend, sampled at the SLO "
+                "cadence")
+            self._h_dispatch_handoff = reg.histogram(
+                "dispatch_handoff_p99_ms_sampled",
+                "hand-off p99 queue wait per backend, sampled at the SLO "
+                "cadence")
         # ---- durability plane (repro.store): mounted before anything that
         # can dead-letter, so every published record is journaled from t=0
         self.store = None
@@ -304,6 +347,14 @@ class AlertMixPipeline:
                 # a delivery.write span; named after the terminal so the
                 # delivery_failed:<backend> reason key is unchanged
                 write_target = TracingSink(terminal, self.tracer,
+                                           name=terminal.name)
+            if self.latency is not None:
+                # also inside the retry envelope: every attempt's wall
+                # cost lands in plane_latency{plane="delivery.write"},
+                # and a record's end-to-end latency is measured at the
+                # moment its write LANDS (batching delay, retry backoff,
+                # and replay outages all count)
+                write_target = LatencySink(write_target, self.latency,
                                            name=terminal.name)
             backend = RetryingSink(
                 write_target,
@@ -407,6 +458,14 @@ class AlertMixPipeline:
         self._backend_health: Dict[str, bool] = {
             b.terminal.name: b.healthy for b in self.fan_out.backends}
 
+        # sampled SLO indicators (per-channel watermark lag, query-plane
+        # staleness, delivery success ratio) pull at a fixed virtual
+        # cadence from step() — monitoring reads (collectors, status
+        # calls) never mutate SLO state
+        self._slo_delivery_prev = (0.0, 0.0)
+        if self.slo is not None:
+            self.slo.add_sampler(self._slo_sample)
+
         # ---- self-monitoring loop (repro.obs.selfmon): the registry
         # re-enters the platform as an ordinary stream on the __health__
         # channel — registered connector, scheduled source, normal worker
@@ -440,6 +499,23 @@ class AlertMixPipeline:
                         "selfmon_backend_lag_anomaly", metric="mean",
                         z=3.0, severity="warning",
                         key_prefix="__health__.delivery_lag"),
+                ]
+            if self.slo is not None:
+                # the SLO engine publishes NORMALIZED burn gauges
+                # (>= 1.0 = alert), so burn alerting is a plain
+                # threshold at 1.0 over the
+                # __health__.slo_fast_burn.<slo> level series — SLO
+                # violations become ordinary alerts with the ordinary
+                # delivery/dead-letter machinery behind them
+                health_rules = list(health_rules) + [
+                    ThresholdRule(
+                        "selfmon_slo_fast_burn", metric="max", op=">=",
+                        threshold=1.0, severity="critical",
+                        key_prefix="__health__.slo_fast_burn"),
+                    ThresholdRule(
+                        "selfmon_slo_slow_burn", metric="max", op=">=",
+                        threshold=1.0, severity="warning",
+                        key_prefix="__health__.slo_slow_burn"),
                 ]
             for rule in health_rules:
                 self.analytics.engine.add_rule(rule)
@@ -493,8 +569,11 @@ class AlertMixPipeline:
             try:
                 res = connector.fetch(src, cursor, self.now)
             except Exception as exc:  # connector fault -> backoff, not crash
-                self._m_fetch_seconds.observe(time.perf_counter() - t0,
+                dt_fetch = time.perf_counter() - t0
+                self._m_fetch_seconds.observe(dt_fetch,
                                               connector=src.connector)
+                if self.latency is not None:
+                    self.latency.observe_plane("ingest.fetch", dt_fetch)
                 root.set("error", type(exc).__name__)
                 self.metrics.fetch_errors_total += 1
                 self._note_fetch(src.connector, error=True)
@@ -504,8 +583,11 @@ class AlertMixPipeline:
                     reason="connector_error")
                 self.registry.mark_failed(src.sid, self.now)
                 return
-            self._m_fetch_seconds.observe(time.perf_counter() - t0,
-                                          connector=src.connector)
+            dt_fetch = time.perf_counter() - t0
+            self._m_fetch_seconds.observe(dt_fetch, connector=src.connector)
+            lat = self.latency
+            if lat is not None:
+                lat.observe_plane("ingest.fetch", dt_fetch)
             self.metrics.fetched_total += 1
             # back-pressure gauges track what the hint actually DEFERS
             # beyond the source's own cadence (a hint <= interval_s applies
@@ -532,6 +614,8 @@ class AlertMixPipeline:
             accepted = 0
             out_batch = []
             trace_id = root.trace_id
+            now_v = self.now
+            skews = [] if lat is not None else None
             # leaf stages land as span EVENTS on the fetch root — tuple
             # appends materialized as child spans on read (cheap path);
             # a raise mid-stage is captured on the root by its __exit__
@@ -553,6 +637,14 @@ class AlertMixPipeline:
                     doc.update(item.extra)
                 if trace_id is not None:
                     doc["trace"] = trace_id
+                # ingest-time stamp (virtual clock): the LatencySink
+                # measures end-to-end latency from this when the
+                # delivery write lands; the stamp rides into the
+                # EventLog, so replayed records measure their true
+                # (outage-inclusive) latency too
+                doc["ingested_at"] = now_v
+                if skews is not None and item.published_at is not None:
+                    skews.append(now_v - item.published_at)
                 out_batch.append((item.guid, doc))
                 if self.item_hook is not None:
                     self.item_hook(doc)
@@ -560,12 +652,20 @@ class AlertMixPipeline:
                     self.analytics.observe(doc, now=self.now)
                 accepted += 1
             root.event("pipeline.process", t0, {"accepted": accepted})
+            if lat is not None:
+                lat.observe_plane("pipeline.process",
+                                  time.perf_counter() - t0)
+                if skews:
+                    lat.observe_freshness(src.channel, skews)
             if out_batch:
                 n_out = len(out_batch)
                 if self.store is not None:   # tee into the durable log
                     t0 = time.perf_counter()
                     self.store.append_documents(out_batch)
                     root.event("store.append", t0, {"records": n_out})
+                    if lat is not None:
+                        lat.observe_plane("store.append",
+                                          time.perf_counter() - t0)
                 # no span here: the delivery plane is covered by the
                 # TracingSink's delivery.write at the moment the write
                 # actually lands (inside the retry envelope)
@@ -737,6 +837,23 @@ class AlertMixPipeline:
             alerts_fired = len(fired)
             self.metrics.alerts_total += alerts_fired
             self.metrics.windows_closed_total = self.analytics.closed_total
+        # SLO plane: pull sampled indicators + refresh burn gauges at the
+        # engine's virtual cadence (deterministic; no-op between samples)
+        if self.slo is not None:
+            self.slo.maybe_sample(self.now)
+        # dispatcher flow-control symptoms, sampled into histograms at
+        # the same cadence (the point-in-time gauges only show the last
+        # scrape; the histograms keep the whole depth distribution)
+        if (self.latency is not None and self.cfg.delivery_dispatch
+                and self.now - self._last_dispatch_sample
+                >= self.cfg.slo_sample_interval_s):
+            self._last_dispatch_sample = self.now
+            for key, st in self.fan_out.backend_stats().items():
+                if "queue_depth" in st:
+                    self._h_dispatch_depth.observe(
+                        st["queue_depth"], backend=key)
+                    self._h_dispatch_handoff.observe(
+                        st["handoff_p99_ms"], backend=key)
         return {"picked": picked, "pulled": pulled, "done": done,
                 "backlog": sum(len(q) for q in self.main_queues.values()),
                 "mailbox": len(self.mailbox), "pool": self.pool.size,
@@ -809,6 +926,53 @@ class AlertMixPipeline:
             return {"enabled": False}
         return {"enabled": True, **self.query.status()}
 
+    # ---- SLO / latency plane (repro.obs.slo, repro.obs.latency) -------------
+    def _slo_sample(self, now: float):
+        """Sampled SLO indicators, pulled by the engine at its virtual
+        cadence: per-channel watermark lag, query-plane serving
+        staleness, and the delivery success ratio (delta of
+        terminal-accepted vs dead-lettered records since the last
+        sample)."""
+        out = []
+        if self.latency is not None:
+            for channel, t in self.latency._max_event_time.items():
+                out.append(("watermark_lag", max(0.0, now - t),
+                            {"channel": channel}))
+        if self.query is not None:
+            wm = self.query.status()["watermark"]
+            if wm != float("-inf"):
+                out.append(("query_staleness", max(0.0, now - wm), {}))
+        good = bad = 0.0
+        for st in self.fan_out.backend_stats().values():
+            good += st["terminal_emitted"]
+            bad += st["dead_lettered"]
+        pg, pb = self._slo_delivery_prev
+        self._slo_delivery_prev = (good, bad)
+        dg, db = int(good - pg), int(bad - pb)
+        if dg or db:
+            out.append(("delivery_success_ratio", dg, db, {}))
+        return out
+
+    def slo_status(self) -> dict:
+        """SLO error budgets + multi-window burn rates per spec
+        (``{"enabled": False}`` when ``cfg.slos`` is empty)."""
+        if self.slo is None:
+            return {"enabled": False}
+        return self.slo.status(self.now)
+
+    def latency_status(self) -> dict:
+        """Always-on latency plane summary: per-plane hop histograms
+        plus the end-to-end fetch-to-delivered series
+        (``{"enabled": False}`` when ``cfg.latency_tracking`` is off)."""
+        if self.latency is None:
+            return {"enabled": False}
+        lt = self.latency
+        planes = {labels["plane"]: lt.plane.summary(**labels)
+                  for labels, _ in lt.plane.items()}
+        e2e = [{"labels": labels, **lt.e2e.summary(**labels)}
+               for labels, _ in lt.e2e.items()]
+        return {"enabled": True, "planes": planes, "e2e": e2e}
+
     def close(self) -> None:
         """Flush delivery and close the durability plane (fsyncs the
         active log segments so a reopen sees every appended record) and
@@ -848,6 +1012,8 @@ class AlertMixPipeline:
         self.metrics.store = self.store_stats()
         self.metrics.ingest = self.connector_stats()
         self.metrics.query = self.query_stats()
+        self.metrics.slo = ({} if self.slo is None
+                            else self.slo.status(self.now))
 
     def connector_stats(self) -> dict:
         """Live per-connector ingress counters: fetches, items,
@@ -955,6 +1121,22 @@ class AlertMixPipeline:
             g("store_pending_replay_records",
               "journaled records awaiting replay").set(
                 st["pending_replay_records"])
+            # replay-chain breakdown (StageProfiler): the ROADMAP item-1
+            # gap — which stage eats the batch-replay time — visible in
+            # every scrape, not just replay_status()["profile"]
+            for stage, ps in self.store.replay.profiler.snapshot().items():
+                g("replay_stage_share",
+                  "fraction of profiled replay wall-clock per stage").set(
+                    ps["share"], stage=stage)
+                g("replay_stage_mean_ms",
+                  "mean wall-clock per replay-stage pass").set(
+                    ps["mean_ms"], stage=stage)
+                c("replay_stage_calls_total",
+                  "passes through each replay stage").sync(
+                    ps["calls"], stage=stage)
+                c("replay_stage_ms_total",
+                  "total wall-clock milliseconds per replay stage").sync(
+                    ps["total_ms"], stage=stage)
         if self.query is not None:
             qs = self.query.status()
             c("query_queries_total",

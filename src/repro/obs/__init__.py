@@ -37,7 +37,9 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
 )
+from repro.obs.latency import LatencySink, LatencyTracker
 from repro.obs.profiler import StageProfiler
+from repro.obs.slo import SLOEngine, SLOSpec
 from repro.obs.trace import Span, TraceExporter, Tracer, TracingSink
 
 
@@ -62,6 +64,7 @@ class Observability:
 
 
 __all__ = [
-    "Counter", "Gauge", "Histogram", "MetricsRegistry", "Observability",
+    "Counter", "Gauge", "Histogram", "LatencySink", "LatencyTracker",
+    "MetricsRegistry", "Observability", "SLOEngine", "SLOSpec",
     "Span", "StageProfiler", "TraceExporter", "Tracer", "TracingSink",
 ]

@@ -195,6 +195,30 @@ class Histogram(_Instrument):
             if v > s.max:
                 s.max = v
 
+    def observe_batch(self, values, **labels) -> None:
+        """Observe many values under one label set with a single lock
+        acquisition — the always-on latency plane's hot path (one call
+        per fetch / per delivery write, not per document)."""
+        if not values:
+            return
+        key = _label_key(labels)
+        bucket = self._bucket_index
+        idxs = [bucket(float(v)) for v in values]
+        with self._lock:
+            s = self._series.get(key)
+            if s is None:
+                s = self._series[key] = _HistSeries(len(self.bounds))
+            counts = s.counts
+            for i in idxs:
+                counts[i] += 1
+            s.count += len(values)
+            s.sum += sum(values)
+            lo, hi = min(values), max(values)
+            if lo < s.min:
+                s.min = float(lo)
+            if hi > s.max:
+                s.max = float(hi)
+
     def count(self, **labels) -> int:
         with self._lock:
             s = self._series.get(_label_key(labels))

@@ -1,0 +1,302 @@
+"""Declarative SLOs with rolling error budgets and multi-window
+burn-rate alerting (the Google SRE workbook recipe, on the virtual
+clock).
+
+An :class:`SLOSpec` names an **indicator** — one of
+
+  ``e2e_latency``              virtual fetch-to-delivered latency/doc
+  ``plane_latency``            wall-clock plane-hop latency (filter
+                               with ``labels={"plane": ...}``)
+  ``freshness``                event-time skew of each accepted doc
+  ``watermark_lag``            sampled: virtual now minus the newest
+                               event time per channel
+  ``query_staleness``          sampled: query-plane staleness_s
+  ``delivery_success_ratio``   delivered vs dead-lettered documents
+
+an **objective** (the per-event threshold: a latency indicator event
+is *good* iff ``value <= objective``; the ratio indicator ignores it),
+a **target** (the fraction of events that must be good, e.g. 0.999)
+and a **window** (the rolling error-budget horizon, seconds).
+
+The engine buckets good/bad counts into coarse virtual-time buckets
+(``BUCKET_S``) per SLO — O(window/30) floats of state, no per-event
+storage — and evaluates the standard multi-window, multi-burn-rate
+pair: a **fast** page when the budget burns >14.4x in BOTH the 5m and
+1h windows, a **slow** ticket when it burns >6x in BOTH the 1h and 6h
+windows.  ``burn = bad_fraction / (1 - target)``: burn 1.0 spends the
+budget exactly at the window's end; 14.4 exhausts a 30-day budget in
+two days.
+
+Burn rates are published as **normalized** gauges
+(``slo_fast_burn{slo=}`` = min(burn_5m, burn_1h) / 14.4, and the slow
+pair over 6) so the self-monitoring loop can alert with a plain
+``ThresholdRule(threshold=1.0)`` — SLO violations become ordinary
+``__health__`` alerts with the ordinary delivery machinery behind
+them.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, Iterable, List, Optional, Tuple
+
+from repro.obs.metrics import MetricsRegistry
+
+INDICATORS = ("e2e_latency", "plane_latency", "freshness",
+              "watermark_lag", "query_staleness",
+              "delivery_success_ratio")
+
+#: virtual-time bucket width for good/bad accounting (seconds)
+BUCKET_S = 30.0
+#: (short, long) burn windows and thresholds — SRE workbook defaults
+FAST_WINDOWS = (300.0, 3600.0)
+FAST_BURN = 14.4
+SLOW_WINDOWS = (3600.0, 21600.0)
+SLOW_BURN = 6.0
+
+
+@dataclass(frozen=True)
+class SLOSpec:
+    """One declarative objective. ``labels`` restricts which recorded
+    events count (every given key must match the event's labels);
+    e.g. ``SLOSpec("fresh-twitter", "freshness", objective=120.0,
+    target=0.99, window=3600.0, labels={"channel": "twitter"})``."""
+    name: str
+    indicator: str
+    objective: float = 1.0
+    target: float = 0.99
+    window: float = 3600.0
+    labels: Dict[str, str] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.indicator not in INDICATORS:
+            raise ValueError(
+                f"unknown SLO indicator {self.indicator!r}; "
+                f"expected one of {INDICATORS}")
+        if not (0.0 < self.target < 1.0):
+            raise ValueError(
+                f"SLO target must be in (0, 1), got {self.target}")
+        if self.window <= 0:
+            raise ValueError("SLO window must be positive")
+
+    def matches(self, labels: Dict[str, str]) -> bool:
+        for k, v in self.labels.items():
+            if labels.get(k) != v:
+                return False
+        return True
+
+
+class _Budget:
+    """Rolling good/bad counts for one SLO, bucketed on virtual time."""
+
+    __slots__ = ("buckets", "good_total", "bad_total")
+
+    def __init__(self):
+        # deque of [bucket_start, good, bad]; append-only at the tail
+        self.buckets: Deque[List[float]] = deque()
+        self.good_total = 0
+        self.bad_total = 0
+
+    def add(self, now: float, good: int, bad: int, horizon: float) -> None:
+        start = now - (now % BUCKET_S)
+        if self.buckets and self.buckets[-1][0] >= start:
+            b = self.buckets[-1]
+            b[1] += good
+            b[2] += bad
+        else:
+            self.buckets.append([start, float(good), float(bad)])
+        self.good_total += good
+        self.bad_total += bad
+        cutoff = now - horizon - BUCKET_S
+        while self.buckets and self.buckets[0][0] < cutoff:
+            self.buckets.popleft()
+
+    def counts(self, now: float, window: float) -> Tuple[float, float]:
+        """(good, bad) within the trailing ``window`` seconds."""
+        cutoff = now - window
+        good = bad = 0.0
+        for start, g, b in reversed(self.buckets):
+            if start + BUCKET_S <= cutoff:
+                break
+            good += g
+            bad += b
+        return good, bad
+
+    def bad_fraction(self, now: float, window: float) -> float:
+        good, bad = self.counts(now, window)
+        total = good + bad
+        return (bad / total) if total else 0.0
+
+
+class SLOEngine:
+    """Owns the specs, the budgets, the burn gauges, and the sampled
+    indicators.  ``record*`` calls come from the always-on
+    :class:`repro.obs.latency.LatencyTracker` feed; ``maybe_sample``
+    is driven from the pipeline's virtual-clock ``step`` so sampled
+    indicators (watermark lag, query staleness, delivery ratio) are
+    pulled at a fixed cadence — monitoring reads (collectors, status)
+    never mutate SLO state."""
+
+    def __init__(self, specs: Iterable[SLOSpec],
+                 registry: MetricsRegistry, *,
+                 sample_interval_s: float = BUCKET_S):
+        self.specs: List[SLOSpec] = list(specs)
+        names = [s.name for s in self.specs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate SLO names in {names}")
+        self.registry = registry
+        self.sample_interval_s = float(sample_interval_s)
+        self._budgets: Dict[str, _Budget] = {
+            s.name: _Budget() for s in self.specs}
+        # specs indexed by indicator for the hot-path record() calls
+        self._by_indicator: Dict[str, List[SLOSpec]] = {}
+        for s in self.specs:
+            self._by_indicator.setdefault(s.indicator, []).append(s)
+        self._horizon = max(
+            [SLOW_WINDOWS[1]] + [s.window for s in self.specs])
+        self._samplers: List[Callable[[float], Iterable[tuple]]] = []
+        self._last_sample: Optional[float] = None
+        self._g_budget = registry.gauge(
+            "slo_error_budget_remaining",
+            "fraction of the rolling-window error budget left per SLO "
+            "(1 = untouched, 0 = spent, negative = overdrawn)")
+        self._g_fast = registry.gauge(
+            "slo_fast_burn",
+            "normalized fast burn rate per SLO: min(burn_5m, burn_1h) "
+            "/ 14.4 — >= 1.0 means page")
+        self._g_slow = registry.gauge(
+            "slo_slow_burn",
+            "normalized slow burn rate per SLO: min(burn_1h, burn_6h) "
+            "/ 6 — >= 1.0 means ticket")
+
+    # ---- event feed (from LatencyTracker) ----------------------------------
+    def record(self, indicator: str, value: float, now: float,
+               **labels) -> None:
+        specs = self._by_indicator.get(indicator)
+        if not specs:
+            return
+        for s in specs:
+            if s.labels and not s.matches(labels):
+                continue
+            good = value <= s.objective
+            self._budgets[s.name].add(
+                now, 1 if good else 0, 0 if good else 1, self._horizon)
+
+    def record_many(self, indicator: str, values: List[float],
+                    now: float, **labels) -> None:
+        specs = self._by_indicator.get(indicator)
+        if not specs:
+            return
+        for s in specs:
+            if s.labels and not s.matches(labels):
+                continue
+            good = 0
+            obj = s.objective
+            for v in values:
+                if v <= obj:
+                    good += 1
+            self._budgets[s.name].add(
+                now, good, len(values) - good, self._horizon)
+
+    def record_ratio(self, indicator: str, good: int, bad: int,
+                     now: float, **labels) -> None:
+        """Pre-classified counts (the delivery_success_ratio feed)."""
+        if good == 0 and bad == 0:
+            return
+        specs = self._by_indicator.get(indicator)
+        if not specs:
+            return
+        for s in specs:
+            if s.labels and not s.matches(labels):
+                continue
+            self._budgets[s.name].add(now, good, bad, self._horizon)
+
+    # ---- sampled indicators -------------------------------------------------
+    def add_sampler(self, fn: Callable[[float], Iterable[tuple]]) -> None:
+        """``fn(now)`` yields ``(indicator, value, labels_dict)`` or
+        ``("delivery_success_ratio", good, bad, labels_dict)``."""
+        self._samplers.append(fn)
+
+    def maybe_sample(self, now: float) -> bool:
+        """Pull sampled indicators + refresh burn gauges if a sample
+        interval has elapsed on the virtual clock. Returns True when a
+        sample was taken (cadence is deterministic)."""
+        if (self._last_sample is not None
+                and now - self._last_sample < self.sample_interval_s):
+            return False
+        self._last_sample = now
+        for fn in self._samplers:
+            for item in fn(now):
+                indicator = item[0]
+                if indicator == "delivery_success_ratio":
+                    _, good, bad, labels = item
+                    self.record_ratio(indicator, good, bad, now, **labels)
+                else:
+                    _, value, labels = item
+                    self.record(indicator, value, now, **labels)
+        self.evaluate(now)
+        return True
+
+    # ---- evaluation ---------------------------------------------------------
+    def _burns(self, spec: SLOSpec, now: float) -> Dict[str, float]:
+        budget = self._budgets[spec.name]
+        denom = 1.0 - spec.target
+        burn = {}
+        for w in {*FAST_WINDOWS, *SLOW_WINDOWS}:
+            burn[w] = budget.bad_fraction(now, w) / denom
+        return burn
+
+    def evaluate(self, now: float) -> Dict[str, Dict[str, float]]:
+        """Recompute every SLO's burn rates + budget, publish gauges,
+        return ``{name: {"fast": ..., "slow": ..., "budget": ...}}``
+        (normalized: >= 1.0 fast means page)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for spec in self.specs:
+            budget = self._budgets[spec.name]
+            burn = self._burns(spec, now)
+            fast = min(burn[FAST_WINDOWS[0]],
+                       burn[FAST_WINDOWS[1]]) / FAST_BURN
+            slow = min(burn[SLOW_WINDOWS[0]],
+                       burn[SLOW_WINDOWS[1]]) / SLOW_BURN
+            frac = budget.bad_fraction(now, spec.window)
+            remaining = 1.0 - frac / (1.0 - spec.target)
+            self._g_fast.set(fast, slo=spec.name)
+            self._g_slow.set(slow, slo=spec.name)
+            self._g_budget.set(remaining, slo=spec.name)
+            out[spec.name] = {"fast": fast, "slow": slow,
+                              "budget": remaining}
+        return out
+
+    def status(self, now: float) -> dict:
+        """Full point-in-time report (also refreshes the gauges)."""
+        normalized = self.evaluate(now)
+        slos = {}
+        for spec in self.specs:
+            budget = self._budgets[spec.name]
+            good, bad = budget.counts(now, spec.window)
+            n = normalized[spec.name]
+            slos[spec.name] = {
+                "indicator": spec.indicator,
+                "objective": spec.objective,
+                "target": spec.target,
+                "window_s": spec.window,
+                "labels": dict(spec.labels),
+                "good": good,
+                "bad": bad,
+                "bad_fraction": (bad / (good + bad)) if good + bad else 0.0,
+                "budget_remaining": n["budget"],
+                "fast_burn": n["fast"],
+                "slow_burn": n["slow"],
+                "burning_fast": n["fast"] >= 1.0,
+                "burning_slow": n["slow"] >= 1.0,
+            }
+        return {
+            "enabled": True,
+            "specs": len(self.specs),
+            "sample_interval_s": self.sample_interval_s,
+            "burning_fast": sorted(
+                k for k, v in slos.items() if v["burning_fast"]),
+            "burning_slow": sorted(
+                k for k, v in slos.items() if v["burning_slow"]),
+            "slos": slos,
+        }

@@ -384,6 +384,7 @@ class TraceExporter:
         self._fh = None
         self._bytes = 0
         self.exported = 0
+        self.torn_skipped = 0
 
     def _open_next(self) -> None:
         if self._fh is not None:
@@ -408,16 +409,33 @@ class TraceExporter:
                 self._fh.flush()
 
     def scan(self):
-        """Yield every exported span dict, file order then line order."""
+        """Yield every exported span dict, file order then line order.
+
+        Crash tolerance (the store plane's standard): a process dying
+        mid-append leaves at most one torn line, and — because reopen
+        always starts a NEW file — only ever as a file's FINAL line.
+        A final line that fails to decode is skipped (counted in
+        ``torn_skipped``); a corrupt line anywhere else is real damage
+        and still raises."""
         self.flush()
         for fname in sorted(os.listdir(self.dir)):
             if not (fname.startswith("spans-") and fname.endswith(".jsonl")):
                 continue
             with open(os.path.join(self.dir, fname), encoding="utf-8") as fh:
-                for line in fh:
-                    line = line.strip()
-                    if line:
-                        yield json.loads(line)
+                lines = fh.read().splitlines()
+            while lines and not lines[-1].strip():
+                lines.pop()
+            for i, line in enumerate(lines):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    yield json.loads(line)
+                except ValueError:
+                    if i == len(lines) - 1:       # torn tail: crash artifact
+                        self.torn_skipped += 1
+                        continue
+                    raise
 
     def close(self) -> None:
         with self._lock:

@@ -381,6 +381,14 @@ class ServeEngine:
             return {"enabled": False}
         return {"enabled": True, **self.ingest.obs_status()}
 
+    def slo_status(self) -> dict:
+        """SLO error budgets + burn rates of the attached pipeline
+        (``repro.obs.slo``), or ``{"enabled": False}`` without an
+        ingestion plane / without configured SLOs."""
+        if self.ingest is None:
+            return {"enabled": False}
+        return self.ingest.slo_status()
+
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         for _ in range(max_steps):
             pending = len(self.main_q) + len(self.prio_q)

@@ -1,0 +1,69 @@
+"""Perf-trajectory gate (benchmarks/compare.py): history round-trip,
+flattening, regression detection, and the CLI exit-code contract CI
+relies on (warn-only never fails the build; a short history is not an
+error)."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import compare  # noqa: E402
+
+
+def test_flatten_scalars_numeric_leaves_only():
+    flat = compare.flatten_scalars({
+        "a": {"b": 2, "ratio": 0.97, "note": "str", "smoke": True},
+        "top": 1.5,
+        "deep": {"x": {"y": 3}},
+    })
+    assert flat == {"a.b": 2.0, "a.ratio": 0.97, "top": 1.5, "deep.x.y": 3.0}
+
+
+def test_history_append_and_load_roundtrip(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    compare.append_entry({"m": 1.0}, path)
+    compare.append_entry({"m": 2.0}, path, source="artifacts")
+    entries = compare.load_history(path)
+    assert [e["metrics"]["m"] for e in entries] == [1.0, 2.0]
+    assert entries[1]["source"] == "artifacts"
+    assert all("ts" in e for e in entries)
+
+
+def test_compare_flags_regressions_past_threshold():
+    prev = {"metrics": {"fast": 100.0, "slow": 100.0, "gone": 1.0}}
+    curr = {"metrics": {"fast": 110.0, "slow": 160.0, "new": 1.0}}
+    rows, regressions = compare.compare(prev, curr, 0.25)
+    assert regressions == ["slow"]           # +60% > 25%; +10% passes
+    by_name = {r[0]: r for r in rows}
+    assert by_name["slow"][3] == pytest.approx(0.60)
+    # one-sided metrics are reported (delta None) but never gate
+    assert by_name["gone"][3] is None and by_name["new"][3] is None
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    path = str(tmp_path / "hist.jsonl")
+    assert compare.main(["--history", path]) == 0          # no file
+    compare.append_entry({"m": 100.0}, path)
+    assert compare.main(["--history", path]) == 0          # one entry
+    compare.append_entry({"m": 200.0}, path)               # +100%
+    assert compare.main(["--history", path]) == 1
+    assert "REGRESSED" in capsys.readouterr().out
+    assert compare.main(["--history", path, "--warn-only"]) == 0
+    assert compare.main(["--history", path, "--threshold", "1.5"]) == 0
+    compare.append_entry({"m": 190.0}, path)               # improved
+    assert compare.main(["--history", path]) == 0
+
+
+def test_cli_collect_scrapes_bench_json(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    (tmp_path / "BENCH_obs.json").write_text(json.dumps(
+        {"latency_overhead": {"ratio": 0.97, "docs": 50}, "smoke": True}))
+    path = str(tmp_path / "hist.jsonl")
+    assert compare.main(["--history", path, "--collect"]) == 0
+    (entry,) = compare.load_history(path)
+    assert entry["metrics"] == {"obs.latency_overhead.ratio": 0.97,
+                                "obs.latency_overhead.docs": 50.0}
+    assert entry["source"] == "artifacts"

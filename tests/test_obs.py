@@ -4,9 +4,11 @@ acceptance paths (one pushed document = one cross-plane trace; a
 dead-letter flood fires a __health__ alert through the ordinary rule
 engine; replay_status() itemizes the batch chain)."""
 import json
+import math
 import os
 
 import pytest
+from _hyp import given, settings, st
 
 from repro.obs import (
     Counter,
@@ -64,6 +66,80 @@ def test_histogram_quantiles_and_summary():
     s = h.summary()
     assert s["count"] == 5 and s["min"] == 0.001 and s["max"] == 0.1
     assert Histogram("empty").quantile(0.99) == 0.0
+
+
+def test_histogram_quantile_log_bucket_relative_error():
+    """Log buckets (base b) report a quantile as the containing bucket's
+    upper bound: true <= reported <= b * true, across magnitudes."""
+    for mag in (1e-5, 1e-3, 1e-1, 10.0, 1e3):
+        h = Histogram("lat")                   # defaults: 1e-6, base 2
+        vals = [mag * (1.0 + i / 100.0) for i in range(100)]
+        for v in vals:
+            h.observe(v)
+        ref = sorted(vals)
+        for q in (0.1, 0.5, 0.9, 0.99):
+            true = ref[max(0, -(-int(q * 100) // 1) - 1)]
+            got = h.quantile(q)
+            assert true <= got * (1 + 1e-9), (mag, q)
+            assert got <= 2.0 * true * (1 + 1e-9), (mag, q)
+
+
+def test_histogram_quantile_edge_cases():
+    # a value exactly on a bucket bound stays in that bucket (le
+    # semantics): the reported quantile is exact
+    h = Histogram("lat", min_bound=1e-3, base=2.0, num_buckets=10)
+    h.observe(0.004)                           # == bounds[2]
+    assert h.quantile(0.5) == 0.004
+    # single observation: every quantile is that observation (max-cap)
+    h2 = Histogram("one")
+    h2.observe(0.37)
+    for q in (0.01, 0.5, 0.99, 1.0):
+        assert h2.quantile(q) == pytest.approx(0.37)
+    # q=1.0 is the observed max, never a bucket bound above it
+    h3 = Histogram("many")
+    for v in (0.1, 0.2, 0.9):
+        h3.observe(v)
+    assert h3.quantile(1.0) == pytest.approx(0.9)
+    # values below min_bound land in bucket 0; max still caps
+    h4 = Histogram("tiny", min_bound=1e-3)
+    h4.observe(1e-9)
+    assert h4.quantile(0.5) == pytest.approx(1e-9)
+    with pytest.raises(ValueError):
+        h3.quantile(0.0)
+    with pytest.raises(ValueError):
+        h3.quantile(1.1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=1e-6, max_value=1e5,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=200),
+       st.floats(min_value=0.01, max_value=1.0))
+def test_histogram_quantile_hypothesis_roundtrip(vals, q):
+    h = Histogram("lat")
+    for v in vals:
+        h.observe(v)
+    ref = sorted(vals)
+    true = ref[max(0, math.ceil(q * len(vals)) - 1)]
+    got = h.quantile(q)
+    # containing-bucket upper bound, capped by the observed max: never
+    # under-reports, never over by more than one bucket ratio
+    assert got * (1 + 1e-9) >= true
+    assert got <= max(2.0 * true, 1e-6) * (1 + 1e-9)
+    assert got <= ref[-1] * (1 + 1e-9)
+
+
+def test_histogram_observe_batch_matches_sequential():
+    a = Histogram("a")
+    b = Histogram("b")
+    vals = [0.001, 0.5, 3.0, 3.0, 120.0, 1e-9]
+    for v in vals:
+        a.observe(v, plane="x")
+    b.observe_batch(vals, plane="x")
+    assert a.summary(plane="x") == b.summary(plane="x")
+    assert b.count(plane="x") == len(vals)
+    b.observe_batch([], plane="x")            # no-op
+    assert b.count(plane="x") == len(vals)
 
 
 def test_registry_kind_conflict_and_get_or_create():
@@ -179,6 +255,71 @@ def test_trace_exporter_roundtrip_and_roll(tmp_path):
     assert len(back) == 10
     assert [s["attrs"]["i"] for s in back] == list(range(10))
     assert len(os.listdir(d)) > 1            # rolled at least once
+
+
+def test_trace_exporter_scan_across_rolled_files_in_order():
+    """scan() stitches multiple size-rolled files (and files from a
+    previous exporter generation) back in append order."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        exp = TraceExporter(d, max_bytes=150)
+        tr = Tracer(sample_rate=1.0, exporter=exp)
+        for i in range(20):
+            with tr.span("w") as sp:
+                sp.set("i", i)
+        exp.close()
+        assert len(os.listdir(d)) >= 3
+        # reopen: a NEW file continues the sequence
+        exp2 = TraceExporter(d, max_bytes=150)
+        tr2 = Tracer(sample_rate=1.0, exporter=exp2)
+        with tr2.span("w") as sp:
+            sp.set("i", 20)
+        exp2.close()
+        assert [s["attrs"]["i"] for s in exp2.scan()] == list(range(21))
+
+
+def test_trace_exporter_skips_torn_final_line(tmp_path):
+    """Crash mid-append leaves a torn final line; reopen + scan skip it
+    (reopen always starts a new file, so a torn line is only ever a
+    file's tail) — the store plane's crash-tolerance standard."""
+    d = str(tmp_path / "spans")
+    exp = TraceExporter(d)
+    tr = Tracer(sample_rate=1.0, exporter=exp)
+    for i in range(3):
+        with tr.span("w") as sp:
+            sp.set("i", i)
+    exp.close()
+    fname = sorted(os.listdir(d))[-1]
+    with open(os.path.join(d, fname), "a", encoding="utf-8") as fh:
+        fh.write('{"trace_id": "t-torn", "na')     # torn mid-record
+    exp2 = TraceExporter(d)                        # reopen after "crash"
+    tr2 = Tracer(sample_rate=1.0, exporter=exp2)
+    with tr2.span("w") as sp:
+        sp.set("i", 3)
+    exp2.close()
+    back = list(exp2.scan())
+    assert [s["attrs"]["i"] for s in back] == [0, 1, 2, 3]
+    assert exp2.torn_skipped == 1
+
+
+def test_trace_exporter_corrupt_middle_line_still_raises(tmp_path):
+    """Only a file's FINAL line can be a crash artifact; corruption in
+    the middle is real damage and must not be silently skipped."""
+    d = str(tmp_path / "spans")
+    exp = TraceExporter(d)
+    tr = Tracer(sample_rate=1.0, exporter=exp)
+    for _ in range(2):
+        with tr.span("w"):
+            pass
+    exp.close()
+    fname = sorted(os.listdir(d))[-1]
+    path = os.path.join(d, fname)
+    lines = open(path, encoding="utf-8").read().splitlines()
+    lines[0] = '{"broken'
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write("\n".join(lines) + "\n")
+    with pytest.raises(ValueError):
+        list(TraceExporter(d).scan())
 
 
 # ---------------------------------------------------------------- profiler
@@ -392,6 +533,26 @@ def test_replay_status_reports_stage_profile(tmp_path):
         PipelineConfig(num_sources=0, store_dir=str(tmp_path / "s")),
         seed=0)
     assert "profile" in p.replay_status()
+    p.close()
+
+
+def test_replay_stage_profile_exported_as_registry_gauges(tmp_path):
+    """Satellite: the replay StageProfiler breakdown is visible in
+    metrics_text() scrapes, not just replay_status()['profile']."""
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=0, analytics=True,
+                       store_dir=str(tmp_path / "s")), seed=0)
+    p.store.replay.replay_events(
+        [("news", 10.0, 1.0), ("news", 20.0, 2.0)], watermark=1e9)
+    text = p.metrics_text()
+    for stage in ("pack_events", "kernel", "unpack", "state_merge"):
+        assert f'replay_stage_share{{stage="{stage}"}}' in text, stage
+        assert f'replay_stage_calls_total{{stage="{stage}"}}' in text
+    reg = p.obs.metrics
+    shares = [v for _, v in reg.gauge("replay_stage_share").items()]
+    assert sum(shares) == pytest.approx(1.0)
+    assert reg.counter("replay_stage_calls_total").value(
+        stage="kernel") == 1
     p.close()
 
 

@@ -1,0 +1,362 @@
+"""SLO plane (repro.obs.slo + repro.obs.latency): spec validation,
+rolling error-budget math, multi-window burn-rate evaluation, the
+always-on latency plane (independent of trace sampling), the sampled
+indicators, and the acceptance path — an injected 2ms backend stall
+burns the fast window and fires a __health__ burn-rate alert through
+the ordinary rule engine."""
+import time
+
+import pytest
+
+from repro.core.pipeline import AlertMixPipeline, PipelineConfig
+from repro.delivery import CollectingSink
+from repro.obs import LatencySink, LatencyTracker, MetricsRegistry
+from repro.obs.slo import (
+    BUCKET_S,
+    FAST_BURN,
+    SLOW_BURN,
+    SLOEngine,
+    SLOSpec,
+)
+
+
+# ---------------------------------------------------------------- specs
+def test_slospec_validation():
+    with pytest.raises(ValueError):
+        SLOSpec("x", "nonsense_indicator")
+    with pytest.raises(ValueError):
+        SLOSpec("x", "e2e_latency", target=1.0)
+    with pytest.raises(ValueError):
+        SLOSpec("x", "e2e_latency", target=0.0)
+    with pytest.raises(ValueError):
+        SLOSpec("x", "e2e_latency", window=0.0)
+    with pytest.raises(ValueError):
+        SLOEngine([SLOSpec("dup", "e2e_latency"),
+                   SLOSpec("dup", "freshness")], MetricsRegistry())
+
+
+def test_slospec_label_matching():
+    s = SLOSpec("w", "plane_latency", labels={"plane": "delivery.write"})
+    assert s.matches({"plane": "delivery.write", "extra": "x"})
+    assert not s.matches({"plane": "ingest.fetch"})
+    assert not s.matches({})
+
+
+# ---------------------------------------------------------------- budgets
+def _engine(*specs):
+    return SLOEngine(specs, MetricsRegistry())
+
+
+def test_budget_accounting_and_burn_math():
+    spec = SLOSpec("lat", "e2e_latency", objective=1.0, target=0.99,
+                   window=3600.0)
+    eng = _engine(spec)
+    # 90 good + 10 bad events at t=100 -> bad_fraction 0.1,
+    # burn = 0.1 / (1 - 0.99) = 10 in every window that covers t=100
+    eng.record_many("e2e_latency", [0.5] * 90 + [2.0] * 10, 100.0)
+    out = eng.evaluate(400.0)["lat"]
+    assert out["fast"] == pytest.approx(10.0 / FAST_BURN)
+    assert out["slow"] == pytest.approx(10.0 / SLOW_BURN)
+    # the whole error budget is spent 10x over the window's pro-rata,
+    # so remaining = 1 - 0.1/0.01 = -9
+    assert out["budget"] == pytest.approx(-9.0)
+    st = eng.status(400.0)
+    assert st["slos"]["lat"]["good"] == 90
+    assert st["slos"]["lat"]["bad"] == 10
+    assert st["burning_fast"] == []          # both windows must burn
+
+
+def test_burn_requires_both_windows():
+    """Old bad events outside the 5m window but inside 1h must NOT page
+    (the multi-window condition: fast = min(burn_5m, burn_1h))."""
+    spec = SLOSpec("lat", "e2e_latency", objective=1.0, target=0.99,
+                   window=21600.0)
+    eng = _engine(spec)
+    eng.record_many("e2e_latency", [9.0] * 100, 1000.0)   # all bad
+    # shortly after: both windows see them -> burning
+    assert eng.evaluate(1060.0)["lat"]["fast"] >= 1.0
+    # 40 minutes later the 5m window is clean, 1h still burns -> no page
+    out = eng.evaluate(1000.0 + 2400.0)["lat"]
+    assert out["fast"] == 0.0
+    st = eng.status(1000.0 + 2400.0)
+    assert st["slos"]["lat"]["burning_fast"] is False
+
+
+def test_budget_buckets_expire_beyond_horizon():
+    spec = SLOSpec("lat", "e2e_latency", objective=1.0, target=0.9,
+                   window=600.0)
+    eng = _engine(spec)
+    eng.record("e2e_latency", 5.0, 100.0)                 # bad
+    assert eng.status(200.0)["slos"]["lat"]["bad"] == 1
+    # beyond the spec window the event stops counting against it
+    assert eng.status(100.0 + 601.0 + BUCKET_S)["slos"]["lat"]["bad"] == 0
+
+
+def test_label_filtered_specs_only_count_matching_events():
+    spec = SLOSpec("write", "plane_latency", objective=0.001, target=0.9,
+                   window=600.0, labels={"plane": "delivery.write"})
+    eng = _engine(spec)
+    eng.record("plane_latency", 5.0, 10.0, plane="ingest.fetch")
+    eng.record("plane_latency", 5.0, 10.0, plane="delivery.write")
+    st = eng.status(10.0)["slos"]["write"]
+    assert st["good"] + st["bad"] == 1 and st["bad"] == 1
+
+
+def test_record_ratio_feeds_precounted_events():
+    spec = SLOSpec("ok", "delivery_success_ratio", target=0.99,
+                   window=600.0)
+    eng = _engine(spec)
+    eng.record_ratio("delivery_success_ratio", 98, 2, 50.0)
+    st = eng.status(60.0)["slos"]["ok"]
+    assert st["good"] == 98 and st["bad"] == 2
+    assert st["bad_fraction"] == pytest.approx(0.02)
+
+
+def test_maybe_sample_cadence_and_sampler_feed():
+    spec = SLOSpec("wm", "watermark_lag", objective=100.0, target=0.9,
+                   window=600.0)
+    eng = SLOEngine([spec], MetricsRegistry(), sample_interval_s=30.0)
+    pulls = []
+    eng.add_sampler(lambda now: pulls.append(now) or
+                    [("watermark_lag", 250.0, {"channel": "news"})])
+    assert eng.maybe_sample(0.0) is True
+    assert eng.maybe_sample(10.0) is False    # inside the interval
+    assert eng.maybe_sample(30.0) is True
+    assert pulls == [0.0, 30.0]
+    assert eng.status(31.0)["slos"]["wm"]["bad"] == 2   # 250 > objective
+
+
+def test_burn_gauges_published_to_registry():
+    reg = MetricsRegistry()
+    spec = SLOSpec("lat", "e2e_latency", objective=1.0, target=0.99,
+                   window=3600.0)
+    eng = SLOEngine([spec], reg)
+    eng.record_many("e2e_latency", [9.0] * 10, 100.0)
+    eng.evaluate(130.0)
+    assert reg.gauge("slo_fast_burn").value(slo="lat") >= 1.0
+    assert reg.gauge("slo_slow_burn").value(slo="lat") >= 1.0
+    assert reg.gauge("slo_error_budget_remaining").value(slo="lat") < 0.0
+    text = reg.render_prometheus()
+    assert 'slo_fast_burn{slo="lat"}' in text
+
+
+# ------------------------------------------------------- latency tracker
+def test_latency_tracker_plane_e2e_freshness():
+    reg = MetricsRegistry()
+    lt = LatencyTracker(reg, clock=lambda: 1000.0)
+    lt.observe_plane("ingest.fetch", 0.002)
+    lt.observe_e2e("news", [5.0, 6.0], "es")
+    lt.observe_freshness("news", [30.0, 90.0])
+    assert lt.plane.count(plane="ingest.fetch") == 1
+    assert lt.e2e.count(channel="news", backend="es") == 2
+    assert lt.freshness.count(channel="news") == 2
+    # watermark-lag gauge = now - newest event time = min skew
+    snap = reg.snapshot()
+    wm = snap["gauges"]["channel_watermark_lag_seconds"]["series"]
+    assert wm == [{"labels": {"channel": "news"}, "value": 30.0}]
+
+
+def test_latency_sink_is_transparent_and_measures_e2e():
+    reg = MetricsRegistry()
+    lt = LatencyTracker(reg, clock=lambda: 100.0)
+    term = CollectingSink("es")
+    sink = LatencySink(term, lt, name=term.name)
+    assert sink.terminal is term          # .inner chain traversal intact
+    sink.emit([("d1", {"channel": "news", "ingested_at": 40.0}),
+               ("d2", {"channel": "news"}),          # unstamped: skipped
+               ("d3", {"ingested_at": 99.0})])        # channel defaults ""
+    assert len(term) == 3
+    assert lt.plane.count(plane="delivery.write") == 1
+    assert lt.e2e.count(channel="news", backend="es") == 1
+    assert lt.e2e.sum(channel="news", backend="es") == pytest.approx(60.0)
+    assert lt.e2e.count(channel="", backend="es") == 1
+
+
+def test_latency_sink_failed_write_records_no_e2e():
+    class Exploding(CollectingSink):
+        def emit(self, batch):
+            raise RuntimeError("down")
+
+    reg = MetricsRegistry()
+    lt = LatencyTracker(reg, clock=lambda: 100.0)
+    sink = LatencySink(Exploding("es"), lt)
+    with pytest.raises(RuntimeError):
+        sink.emit([("d1", {"channel": "news", "ingested_at": 40.0})])
+    # the attempt's wall cost is recorded, the delivery is not
+    assert lt.plane.count(plane="delivery.write") == 1
+    assert lt.e2e.count(channel="news", backend="es") == 0
+
+
+# ------------------------------------------------- pipeline integration
+def test_always_on_latency_with_tracing_off():
+    """Acceptance: with trace_sample_rate=0 (the default) the per-plane
+    and end-to-end histograms still record every document."""
+    term = CollectingSink("docs")
+    p = AlertMixPipeline(PipelineConfig(num_sources=0), seed=0,
+                         sinks=[term])
+    sid = p.add_source("news", connector="push")
+    p.push(sid, [{"title": "t", "body": "b", "published_at": 1.0}])
+    p.run_for(30)
+    assert p.tracer.status()["finished_spans"] == 0     # tracing off
+    assert len(term) == 1
+    _, doc = term.records[0]
+    assert "trace" not in doc
+    assert doc["ingested_at"] > 0.0                     # virtual stamp
+    lt = p.latency
+    assert lt.e2e.count(channel="news", backend="docs") == 1
+    for plane in ("ingest.fetch", "pipeline.process", "delivery.write"):
+        assert lt.plane.count(plane=plane) >= 1, plane
+    assert lt.freshness.count(channel="news") == 1
+    st = p.latency_status()
+    assert st["enabled"] is True
+    assert st["planes"]["delivery.write"]["count"] >= 1
+
+
+def test_e2e_latency_is_virtual_and_includes_batching_delay():
+    """e2e is measured on the VIRTUAL clock from the ingest stamp to the
+    landed write — the batching delay is part of the number."""
+    term = CollectingSink("docs")
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=0, delivery_batch=64,
+                       delivery_max_delay_s=20.0),
+        seed=0, sinks=[term])
+    sid = p.add_source("news", connector="push")
+    p.push(sid, [{"title": "t", "body": "b", "published_at": 1.0}])
+    p.run_for(60)
+    s = p.latency.e2e.summary(channel="news", backend="docs")
+    assert s["count"] == 1
+    # the single doc sat in the batcher until the time-based flush;
+    # its virtual latency is positive and bounded by the run
+    assert 0.0 < s["max"] <= 60.0
+
+
+def test_latency_tracking_off_disables_the_plane():
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=5, latency_tracking=False), seed=0)
+    p.run_for(300)
+    assert p.latency is None
+    assert p.latency_status() == {"enabled": False}
+    assert "plane_latency_seconds" not in p.obs.metrics
+    assert p.slo_status() == {"enabled": False}
+
+
+def test_pipeline_slo_sampled_indicators():
+    """watermark_lag / query_staleness / delivery_success_ratio feed
+    from the pipeline sampler at the virtual cadence."""
+    p = AlertMixPipeline(
+        PipelineConfig(
+            num_sources=20, query=True,
+            slos=[SLOSpec("wm", "watermark_lag", objective=1e6,
+                          target=0.99, window=3600.0),
+                  SLOSpec("stale", "query_staleness", objective=1e6,
+                          target=0.99, window=3600.0),
+                  SLOSpec("ok", "delivery_success_ratio", target=0.99,
+                          window=3600.0)]),
+        seed=1)
+    p.run_for(900)
+    st = p.slo_status()
+    assert st["enabled"] is True
+    # generous objectives: everything classifies good, but the feeds ran
+    assert st["slos"]["wm"]["good"] > 0
+    assert st["slos"]["stale"]["good"] > 0
+    assert st["slos"]["ok"]["good"] > 0
+    assert st["burning_fast"] == [] and st["burning_slow"] == []
+    p.flush_delivery()
+    assert p.metrics.slo["slos"]["ok"]["good"] > 0
+    p.close()
+
+
+def test_backend_stall_burns_fast_window_and_fires_health_alert():
+    """Acceptance: an injected 2ms backend stall pushes every
+    delivery.write past its 1ms objective, burns the fast window, and
+    the __health__ loop raises a critical burn-rate alert through the
+    ordinary rule engine."""
+    class StallSink(CollectingSink):
+        def emit(self, batch):
+            time.sleep(0.002)
+            super().emit(batch)
+
+    p = AlertMixPipeline(
+        PipelineConfig(
+            num_sources=40, selfmon_interval_s=60.0,
+            slos=[SLOSpec("write-fast", "plane_latency", objective=0.001,
+                          target=0.99, window=3600.0,
+                          labels={"plane": "delivery.write"})]),
+        seed=1, sinks=[StallSink("stalled")])
+    p.run_for(1800)
+    st = p.slo_status()
+    s = st["slos"]["write-fast"]
+    assert s["bad"] > 0 and s["good"] == 0        # every write stalled
+    assert s["fast_burn"] >= 1.0 and s["burning_fast"]
+    assert "write-fast" in st["burning_fast"]
+    assert s["budget_remaining"] < 0.0
+    burn = [a for a in p.alerts if a.rule == "selfmon_slo_fast_burn"]
+    assert burn, f"no burn alert; fired={[a.rule for a in p.alerts]}"
+    assert burn[0].key == "__health__.slo_fast_burn.write-fast"
+    assert burn[0].severity == "critical"
+    assert burn[0].value >= 1.0
+    # the slow pair burns too at 100% bad (burn 100 > 6 in both windows)
+    assert any(a.rule == "selfmon_slo_slow_burn" for a in p.alerts)
+    p.close()
+
+
+def test_failing_backend_burns_delivery_success_slo():
+    """A backend that dead-letters everything drives the success-ratio
+    SLO's budget negative via the sampled delta feed."""
+    class Down(CollectingSink):
+        def emit(self, batch):
+            raise RuntimeError("down")
+
+    p = AlertMixPipeline(
+        PipelineConfig(
+            num_sources=30, delivery_retry_attempts=1,
+            slos=[SLOSpec("ok", "delivery_success_ratio", target=0.999,
+                          window=3600.0)]),
+        seed=1, sinks=[Down("down")])
+    p.run_for(900)
+    st = p.slo_status()["slos"]["ok"]
+    assert st["bad"] > 0 and st["good"] == 0
+    assert st["budget_remaining"] < 0.0
+    p.close()
+
+
+def test_dispatch_queue_depth_sampled_into_histograms():
+    p = AlertMixPipeline(
+        PipelineConfig(num_sources=30, delivery_dispatch=True), seed=0)
+    try:
+        p.run_for(600)
+        h = p.obs.metrics.histogram("dispatch_queue_depth_sampled")
+        assert h.count(backend="IndexSink") > 0
+        assert p.obs.metrics.histogram(
+            "dispatch_handoff_p99_ms_sampled").count(backend="IndexSink") > 0
+    finally:
+        p.close()
+
+
+def test_serve_engine_slo_status_delegates():
+    import jax
+
+    from repro.config import ServeConfig
+    from repro.configs import get_arch
+    from repro.models.model import build_model
+    from repro.models.param import init_params
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_arch("qwen2_5_3b").smoke
+    model = build_model(cfg)
+    params = init_params(model.param_defs(), jax.random.PRNGKey(0))
+    bare = ServeEngine(model, params,
+                       ServeConfig(max_batch=2, max_seq_len=64), eos_id=-1)
+    assert bare.slo_status() == {"enabled": False}
+    pipe = AlertMixPipeline(
+        PipelineConfig(num_sources=5,
+                       slos=[SLOSpec("e2e", "e2e_latency", objective=600.0,
+                                     target=0.99, window=3600.0)]),
+        seed=0)
+    pipe.run_for(300)
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_batch=2, max_seq_len=64),
+                      eos_id=-1, ingest=pipe)
+    st = eng.slo_status()
+    assert st["enabled"] is True and "e2e" in st["slos"]
+    assert st == pipe.slo_status()

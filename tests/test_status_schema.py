@@ -13,6 +13,7 @@ from repro.configs import get_arch
 from repro.core.pipeline import AlertMixPipeline, PipelineConfig
 from repro.models.model import build_model
 from repro.models.param import init_params
+from repro.obs import SLOSpec
 from repro.serve.engine import ServeEngine
 
 BACKEND_KEYS = {"emitted", "retried", "dead_lettered", "pending_retry",
@@ -25,6 +26,12 @@ QUERY_KEYS = {"queries", "cache_hits", "cache_misses", "stale_rejected",
               "cold_scans", "cold_events", "cache_entries", "staleness_s",
               "hot_segments", "hot_keys", "watermark", "version", "floor",
               "ingested_windows", "merged_windows", "evicted_windows"}
+SLO_TOP_KEYS = {"enabled", "specs", "sample_interval_s", "burning_fast",
+                "burning_slow", "slos"}
+SLO_ENTRY_KEYS = {"indicator", "objective", "target", "window_s", "labels",
+                  "good", "bad", "bad_fraction", "budget_remaining",
+                  "fast_burn", "slow_burn", "burning_fast", "burning_slow"}
+HIST_SUMMARY_KEYS = {"count", "sum", "min", "max", "p50", "p99"}
 
 
 @pytest.fixture(scope="module")
@@ -35,7 +42,9 @@ def engine_with_pipeline(tmp_path_factory):
     pipe = AlertMixPipeline(
         PipelineConfig(num_sources=10,
                        store_dir=str(tmp_path_factory.mktemp("store")),
-                       selfmon_interval_s=300.0, query=True),
+                       selfmon_interval_s=300.0, query=True,
+                       slos=[SLOSpec("e2e", "e2e_latency", objective=900.0,
+                                     target=0.99, window=3600.0)]),
         seed=0)
     pipe.run_for(600)
     eng = ServeEngine(model, params,
@@ -133,3 +142,88 @@ def test_obs_status_schema(engine_with_pipeline):
     # every Metrics.ingest/delivery/store snapshot stays parseable
     pipe.flush_delivery()
     assert set(pipe.metrics.ingest) == set(pipe.connector_stats())
+
+
+def test_slo_status_schema(engine_with_pipeline):
+    """``slo_status()`` (pipeline + serving tier) and ``Metrics.slo``
+    pin the exact SLO-plane key sets."""
+    eng, pipe = engine_with_pipeline
+    st = eng.slo_status()
+    assert set(st) == SLO_TOP_KEYS
+    assert st["enabled"] is True
+    assert set(st["slos"]) == {"e2e"}
+    for entry in st["slos"].values():
+        assert set(entry) == SLO_ENTRY_KEYS
+    assert pipe.slo_status()["slos"].keys() == st["slos"].keys()
+    pipe.flush_delivery()
+    assert set(pipe.metrics.slo) == SLO_TOP_KEYS
+    for entry in pipe.metrics.slo["slos"].values():
+        assert set(entry) == SLO_ENTRY_KEYS
+    # without configured SLOs, only the flag (and Metrics.slo empty)
+    bare = AlertMixPipeline(PipelineConfig(num_sources=0), seed=0)
+    assert bare.slo_status() == {"enabled": False}
+    bare.flush_delivery()
+    assert bare.metrics.slo == {}
+
+
+def test_latency_status_and_histogram_schema(engine_with_pipeline):
+    """``latency_status()`` shape + the always-on latency histogram
+    series in the registry snapshot."""
+    _, pipe = engine_with_pipeline
+    st = pipe.latency_status()
+    assert set(st) == {"enabled", "planes", "e2e"}
+    assert st["enabled"] is True
+    for summary in st["planes"].values():
+        assert set(summary) == HIST_SUMMARY_KEYS
+    for entry in st["e2e"]:
+        assert set(entry) == {"labels"} | HIST_SUMMARY_KEYS
+        assert set(entry["labels"]) == {"channel", "backend"}
+    snap = pipe.metrics_snapshot()
+    for name in ("plane_latency_seconds", "e2e_latency_seconds",
+                 "freshness_lag_seconds"):
+        assert name in snap["histograms"], name
+    for name in ("channel_watermark_lag_seconds",
+                 "channel_event_time_skew_seconds",
+                 "slo_fast_burn", "slo_slow_burn",
+                 "slo_error_budget_remaining"):
+        assert name in snap["gauges"], name
+    bare = AlertMixPipeline(
+        PipelineConfig(num_sources=0, latency_tracking=False), seed=0)
+    assert bare.latency_status() == {"enabled": False}
+
+
+def _canonical_snapshot(snap: dict) -> dict:
+    """Registry snapshot with WALL-CLOCK histograms reduced to their
+    (deterministic) counts; everything else — counters, gauges, and the
+    virtual-clock histograms — must match bit-for-bit."""
+    wall = {"ingest_fetch_seconds", "plane_latency_seconds",
+            "dispatch_handoff_p99_ms_sampled"}
+    out = {"counters": snap["counters"], "gauges": snap["gauges"],
+           "histograms": {}}
+    for name, entry in snap["histograms"].items():
+        series = entry["series"]
+        if name in wall:
+            series = [{"labels": s["labels"], "count": s["count"]}
+                      for s in series]
+        out["histograms"][name] = {"help": entry["help"], "series": series}
+    return out
+
+
+def test_registry_snapshot_deterministic_across_identical_runs():
+    """Trace sampling (seeded RNG) plus always-on latency/SLO recording
+    produce identical registry snapshots across two identical
+    virtual-clock runs — the replay-an-experiment guarantee."""
+    def run():
+        p = AlertMixPipeline(
+            PipelineConfig(
+                num_sources=30, trace_sample_rate=0.5,
+                slos=[SLOSpec("e2e", "e2e_latency", objective=600.0,
+                              target=0.99, window=3600.0),
+                      SLOSpec("fresh", "freshness", objective=900.0,
+                              target=0.95, window=3600.0)]),
+            seed=7)
+        p.run_for(900)
+        snap = p.metrics_snapshot()
+        p.close()
+        return snap
+    assert _canonical_snapshot(run()) == _canonical_snapshot(run())
