@@ -16,7 +16,9 @@ dashboards costs.
                        EventLog scan + the Pallas window_reduce batch
                        path, with result parity vs a pure-Python
                        reference aggregation asserted here (and in
-                       tests/test_query.py)
+                       tests/test_query.py); a second round runs the
+                       same query against a columnar store, where the
+                       cold scan rides block-stat-pruned numpy lanes
 
 Writes machine-readable results to ``BENCH_query.json`` (CI uploads it
 as an artifact so trajectories accumulate across commits).
@@ -46,7 +48,8 @@ STALENESS_BOUND_S = 900.0
 
 
 def _drive(num_sources: int, virtual_s: float, *, window_s: float = 30.0,
-           store: bool = False, retention: int = 1 << 16) -> tuple:
+           store: bool = False, retention: int = 1 << 16,
+           columnar: bool = False) -> tuple:
     d = tempfile.mkdtemp(prefix="bench_query_") if store else None
     p = AlertMixPipeline(PipelineConfig(
         num_sources=num_sources, feed_interval_s=300.0,
@@ -54,7 +57,7 @@ def _drive(num_sources: int, virtual_s: float, *, window_s: float = 30.0,
         analytics=True, query=True, window_size_s=window_s,
         query_staleness_s=STALENESS_BOUND_S,
         query_max_windows_per_key=retention,
-        store_dir=d), seed=0)
+        store_dir=d, store_columnar=columnar), seed=0)
     p.run_for(virtual_s, dt=5.0)
     return p, d
 
@@ -140,10 +143,13 @@ def bench_concurrency(num_sources: int, virtual_s: float,
 
 
 def bench_cold_range(num_sources: int, virtual_s: float,
-                     iters: int) -> dict:
+                     iters: int, *, columnar: bool = False) -> dict:
     """Queries below the retention floor: EventLog scan + kernel path,
-    with parity vs a pure-Python fold of the same log asserted."""
-    p, d = _drive(num_sources, virtual_s, store=True, retention=16)
+    with parity vs a pure-Python fold of the same log asserted.  With
+    ``columnar=True`` the store is a ColumnarEventLog and the cold scan
+    rides block-stat-pruned numpy lanes instead of per-record decode."""
+    p, d = _drive(num_sources, virtual_s, store=True, retention=16,
+                  columnar=columnar)
     try:
         st = p.query.status()
         assert st["floor"] > 0.0, "retention never evicted; no cold range"
@@ -214,11 +220,22 @@ def main(rows, *, smoke: bool = False):
         f"events/scan={cold['cold_events_per_scan']} "
         f"windows={cold['windows']} parity=ok",
     ))
+    cold_col = bench_cold_range(srcs // 2, vs / 4, cold_iters,
+                                columnar=True)
+    rows.append((
+        "query_cold_range_columnar",
+        1e6 / cold_col["cold_qps"],              # us per cold query
+        f"cold={cold_col['cold_qps']:.1f}q/s "
+        f"(x{cold_col['cold_qps'] / cold['cold_qps']:.1f} vs json) "
+        f"events/scan={cold_col['cold_events_per_scan']} "
+        f"windows={cold_col['windows']} parity=ok",
+    ))
     # machine-readable results land BEFORE the regression asserts so a
     # failing bar still leaves the numbers behind for inspection
     with open("BENCH_query.json", "w", encoding="utf-8") as fh:
         json.dump({"cache_leverage": cache, "concurrency": conc,
-                   "cold_range": cold, "smoke": smoke}, fh, indent=2)
+                   "cold_range": cold, "cold_range_columnar": cold_col,
+                   "smoke": smoke}, fh, indent=2)
     # acceptance bars
     bar = CACHE_BAR_SMOKE if smoke else CACHE_BAR
     assert cache["speedup"] >= bar, (
@@ -229,7 +246,7 @@ def main(rows, *, smoke: bool = False):
         assert r["threads_added"] == 0, (
             f"{r['threads_added']} threads spawned for async subscribers")
         assert r["watch_updates"] > 0
-    assert cold["parity_ok"]
+    assert cold["parity_ok"] and cold_col["parity_ok"]
     return rows
 
 

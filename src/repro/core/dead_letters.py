@@ -40,7 +40,10 @@ REASON_FAMILIES = ("mailbox_overflow", "malformed_item", "late_event",
                    "push_overflow",         # PushConnector buffer bound hit
                    "push_source_removed",   # buffered docs of a removed source
                    # query/serving plane (repro.query)
-                   "query_stale")           # watermark lagged past the bound
+                   "query_stale",           # watermark lagged past the bound
+                   # columnar store plane (repro.store.columnar)
+                   "store_cold_unavailable",  # offloaded segment fetch failed
+                   "compaction_conflict")   # compaction lost its commit race
 
 
 def reason_in_taxonomy(reason: str) -> bool:

@@ -152,6 +152,24 @@ class PipelineConfig:
                                        # journal's truncation floor, so
                                        # disk is reclaimed; off = late
                                        # backlog kept for manual replay)
+    # ---- columnar store plane (repro.store.columnar) -----------------------
+    store_columnar: bool = False       # seal segments as binary columnar
+                                       # blocks; replay + cold queries read
+                                       # column lanes (zero per-record
+                                       # Python on sealed data)
+    columnar_block_rows: int = 2048    # rows per columnar block (the
+                                       # pruning + checksum granularity)
+    compact_interval_s: Optional[float] = None  # keyed compaction cadence
+                                       # (keep-last-per-doc-id); None = off
+    compact_head_segments: int = 2     # newest sealed segments compaction
+                                       # never touches (the dirty head)
+    retention_max_bytes: Optional[int] = None   # sealed-bytes budget;
+                                       # oldest segments released beyond it
+    retention_max_age_s: Optional[float] = None  # event-time age budget
+    offload_dir: Optional[str] = None  # object-store dir for tiered
+                                       # offload of sealed segments;
+                                       # None = keep everything local
+    offload_keep_local: int = 2        # newest sealed segments kept local
     # ---- observability plane (repro.obs) ------------------------------------
     trace_sample_rate: float = 0.0     # fraction of roots traced; 0 = off
                                        # (span() short-circuits, records
@@ -311,9 +329,21 @@ class AlertMixPipeline:
             self.store = StorePlane(
                 cfg.store_dir, segment_bytes=cfg.segment_bytes,
                 segment_age_s=cfg.segment_age_s, fsync=cfg.store_fsync,
-                replay_dedup_window=cfg.replay_dedup_window)
+                replay_dedup_window=cfg.replay_dedup_window,
+                columnar=cfg.store_columnar,
+                block_rows=cfg.columnar_block_rows,
+                compact_interval_s=cfg.compact_interval_s,
+                compact_head_segments=cfg.compact_head_segments,
+                retention_max_bytes=cfg.retention_max_bytes,
+                retention_max_age_s=cfg.retention_max_age_s,
+                offload_dir=cfg.offload_dir,
+                offload_keep_local=cfg.offload_keep_local)
         self.dead_letters = DeadLettersListener(
             journal=None if self.store is None else self.store.journal)
+        if self.store is not None and self.store.columnar:
+            # cold-fetch failures / compaction conflicts surface through
+            # the same taxonomy (and journal) as every other drop
+            self.store.log.dead_letters = self.dead_letters
         ingest = _ingest()
         self.registry = ingest.ShardedStreamRegistry(
             shards=cfg.registry_shards, lease_s=cfg.feed_interval_s * 2)
@@ -447,12 +477,17 @@ class AlertMixPipeline:
                 max_windows_per_key=cfg.query_max_windows_per_key,
                 clock=lambda: self.now,
                 dead_letters=self.dead_letters,
-                tracer=self.tracer if self.tracer.enabled else None)
+                tracer=self.tracer if self.tracer.enabled else None,
+                columnar_lanes=(self.store is not None
+                                and self.store.columnar))
         if self.store is not None:
             # the replay engine aggregates through the SAME rule-engine
             # state the live WindowOperator feeds (batch/live unification)
             self.store.replay.analytics = self.analytics
             self.store.replay.tracer = self.tracer
+            if self.store.columnar:
+                self.store.log.tracer = \
+                    self.tracer if self.tracer.enabled else None
         # per-backend health, tracked across steps so a False -> True flip
         # (backend recovery) can trigger an automatic journal replay
         self._backend_health: Dict[str, bool] = {
@@ -1121,6 +1156,32 @@ class AlertMixPipeline:
             g("store_pending_replay_records",
               "journaled records awaiting replay").set(
                 st["pending_replay_records"])
+            if "columnar" in st:
+                col = st["columnar"]
+                c("store_columnar_sealed_segments_total",
+                  "JSON tails sealed into columnar segments").sync(
+                    col["sealed_columnar_segments"])
+                c("store_compactions_total",
+                  "keyed-compaction passes committed").sync(
+                    col["compactions"])
+                c("store_compacted_records_dropped_total",
+                  "records dropped as superseded by keyed compaction"
+                  ).sync(col["compacted_records_dropped"])
+                c("store_offloaded_segments_total",
+                  "sealed segments moved to the object store").sync(
+                    col["offloaded_segments"])
+                c("store_cold_fetches_total",
+                  "offloaded segments fetched back for a scan").sync(
+                    col["cold_fetches"])
+                c("store_cold_fetch_failures_total",
+                  "cold fetches that failed and were skipped").sync(
+                    col["cold_fetch_failures"])
+                c("store_blocks_pruned_total",
+                  "columnar blocks skipped via min/max block stats").sync(
+                    col["blocks_pruned"])
+                g("store_cold_segments",
+                  "sealed segments currently offloaded").set(
+                    col["cold_segments"])
             # replay-chain breakdown (StageProfiler): the ROADMAP item-1
             # gap — which stage eats the batch-replay time — visible in
             # every scrape, not just replay_status()["profile"]

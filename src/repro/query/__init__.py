@@ -47,7 +47,7 @@ class QueryPlane:
                  cache_entries: int = 1024,
                  max_windows_per_key: int = 4096,
                  clock=None, dead_letters=None, tracer=None,
-                 interpret=None):
+                 interpret=None, columnar_lanes: bool = False):
         self.analytics = analytics
         self.store = MaterializedStore(
             max_windows_per_key=max_windows_per_key)
@@ -63,7 +63,8 @@ class QueryPlane:
             clock=clock,
             dead_letters=dead_letters,
             tracer=tracer,
-            interpret=interpret)
+            interpret=interpret,
+            columnar_lanes=columnar_lanes)
         analytics.add_export(self.store.on_advance)
 
     # ---- sync surface ------------------------------------------------------

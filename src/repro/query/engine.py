@@ -150,7 +150,8 @@ class QueryEngine:
                  clock=None,
                  dead_letters=None,
                  tracer=None,
-                 interpret=None):
+                 interpret=None,
+                 columnar_lanes: bool = False):
         self.store = store
         self.spec = spec
         self.log = log
@@ -165,12 +166,19 @@ class QueryEngine:
         self.dead_letters = dead_letters
         self.tracer = tracer
         self.interpret = interpret
+        # columnar cold path: scan the log's column lanes (block-stat
+        # pruned, zero per-record Python) instead of per-record decode.
+        # Lane semantics equal the pipeline's DEFAULT extractors, so
+        # this must stay False when custom key/value/time fns are in
+        # play — the pipeline opts in when it mounts a columnar store.
+        self.columnar_lanes = columnar_lanes and hasattr(log, "scan_lanes")
         self._lock = threading.Lock()
         # query -> (watermark, version, QueryResult)
         self._cache: "OrderedDict[AggQuery, Tuple[float, int, QueryResult]]" \
             = OrderedDict()
         self.stats = {"queries": 0, "cache_hits": 0, "cache_misses": 0,
-                      "stale_rejected": 0, "cold_scans": 0, "cold_events": 0}
+                      "stale_rejected": 0, "cold_scans": 0, "cold_events": 0,
+                      "cold_columnar": 0}
 
     # ---- public API --------------------------------------------------------
 
@@ -259,7 +267,8 @@ class QueryEngine:
     def _cold_scan_inner(self, q: AggQuery, keys: Sequence[str],
                          hot: Dict[str, List[SegmentRow]]
                          ) -> Dict[str, List[SegmentRow]]:
-        from repro.alerts.batch import reduce_events   # lazy: jax path
+        from repro.alerts.batch import (reduce_columns,   # lazy: jax path
+                                        reduce_events)
 
         cold_end = min(q.end, self.store.floor)
         # any window overlapping [q.start, cold_end) lies entirely within
@@ -268,25 +277,40 @@ class QueryEngine:
         # recompute, then the slot filter below trims the overshoot
         slack = self.spec.size_s
         keyset = set(keys)
-        events = []
-        for _off, payload in self.log.scan():
-            doc = payload.get("doc", payload) if isinstance(payload, dict) \
-                else payload
-            try:
-                key = self.key_fn(doc)
-                if key not in keyset:
-                    continue
-                t = self.time_fn(doc)
-            except (AttributeError, KeyError, TypeError, ValueError):
-                continue                   # non-document payloads in the log
-            if q.start - slack <= t < cold_end + slack:
-                events.append((key, t, self.value_fn(doc)))
-        self.stats["cold_scans"] += 1
-        self.stats["cold_events"] += len(events)
-        if not events:
-            return {}
-        aggs = reduce_events(events, self.spec,
-                             interpret=self.interpret, with_min=True)
+        if self.columnar_lanes:
+            # columnar route: block-stat-pruned lane scan, then the
+            # vectorized packer — no per-record Python anywhere
+            lanes = self.log.scan_lanes(ts_min=q.start - slack,
+                                        ts_max=cold_end + slack,
+                                        keys=keys)
+            self.stats["cold_scans"] += 1
+            self.stats["cold_events"] += lanes.count
+            self.stats["cold_columnar"] += 1
+            if lanes.count == 0:
+                return {}
+            aggs = reduce_columns(lanes.ts, lanes.key_codes, lanes.values,
+                                  lanes.key_vocab, self.spec,
+                                  interpret=self.interpret, with_min=True)
+        else:
+            events = []
+            for _off, payload in self.log.scan():
+                doc = payload.get("doc", payload) \
+                    if isinstance(payload, dict) else payload
+                try:
+                    key = self.key_fn(doc)
+                    if key not in keyset:
+                        continue
+                    t = self.time_fn(doc)
+                except (AttributeError, KeyError, TypeError, ValueError):
+                    continue               # non-document payloads in the log
+                if q.start - slack <= t < cold_end + slack:
+                    events.append((key, t, self.value_fn(doc)))
+            self.stats["cold_scans"] += 1
+            self.stats["cold_events"] += len(events)
+            if not events:
+                return {}
+            aggs = reduce_events(events, self.spec,
+                                 interpret=self.interpret, with_min=True)
         hot_slots = {(k, row[0], row[1])
                      for k, rows in hot.items() for row in rows}
         out: Dict[str, List[SegmentRow]] = {}

@@ -19,12 +19,17 @@ only counted — a backend outage permanently dropped data.  Now:
                      live RuleEngine state              (replay.py)
   StorePlane         the bundle AlertMixPipeline mounts when
                      ``PipelineConfig.store_dir`` is set  (this module)
+  columnar/          the columnar store plane: binary column blocks for
+                     sealed segments, keyed compaction, bytes/age
+                     retention, tiered offload — mounted with
+                     ``PipelineConfig.store_columnar=True``
 """
 from __future__ import annotations
 
 import os
 from typing import Optional
 
+from repro.store.columnar import ColumnarEventLog, LocalDirObjectStore
 from repro.store.journal import DeadLetterJournal, json_safe
 from repro.store.replay import ReplayEngine
 from repro.store.segment_log import CorruptSegmentError, EventLog
@@ -41,11 +46,32 @@ class StorePlane:
     def __init__(self, dir_path: str, *, segment_bytes: int = 1 << 20,
                  segment_age_s: Optional[float] = None,
                  fsync: bool = False, analytics=None,
-                 replay_dedup_window: int = 1 << 16, interpret=None):
+                 replay_dedup_window: int = 1 << 16, interpret=None,
+                 columnar: bool = False, block_rows: int = 2048,
+                 compact_interval_s: Optional[float] = None,
+                 compact_head_segments: int = 2,
+                 retention_max_bytes: Optional[int] = None,
+                 retention_max_age_s: Optional[float] = None,
+                 offload_dir: Optional[str] = None,
+                 offload_keep_local: int = 2):
         self.dir = dir_path
-        self.log = EventLog(os.path.join(dir_path, "documents"),
-                            segment_bytes=segment_bytes,
-                            segment_age_s=segment_age_s, fsync=fsync)
+        self.columnar = columnar
+        if columnar:
+            self.log = ColumnarEventLog(
+                os.path.join(dir_path, "documents"),
+                segment_bytes=segment_bytes, segment_age_s=segment_age_s,
+                fsync=fsync, block_rows=block_rows,
+                compact_interval_s=compact_interval_s,
+                compact_head_segments=compact_head_segments,
+                retention_max_bytes=retention_max_bytes,
+                retention_max_age_s=retention_max_age_s,
+                object_store=(None if offload_dir is None
+                              else LocalDirObjectStore(offload_dir)),
+                offload_keep_local=offload_keep_local)
+        else:
+            self.log = EventLog(os.path.join(dir_path, "documents"),
+                                segment_bytes=segment_bytes,
+                                segment_age_s=segment_age_s, fsync=fsync)
         self.journal = DeadLetterJournal(
             os.path.join(dir_path, "dead_letters"),
             segment_bytes=segment_bytes, fsync=fsync)
@@ -68,7 +94,7 @@ class StorePlane:
         log = self.log.status()
         journal = self.journal.status()
         pending = self.journal.pending()
-        return {
+        out = {
             "appended_records": log["appended_records"],
             "appended_bytes": log["appended_bytes"],
             "segments": log["segments"],
@@ -80,6 +106,9 @@ class StorePlane:
             "replayed_records": self.replay.stats["replayed_records"],
             "replay": dict(self.replay.stats),
         }
+        if self.columnar:
+            out["columnar"] = log["columnar"]
+        return out
 
     def close(self) -> None:
         self.log.close()
@@ -93,6 +122,7 @@ class StorePlane:
 
 
 __all__ = [
-    "CorruptSegmentError", "DeadLetterJournal", "EventLog", "ReplayEngine",
-    "StorePlane", "json_safe",
+    "ColumnarEventLog", "CorruptSegmentError", "DeadLetterJournal",
+    "EventLog", "LocalDirObjectStore", "ReplayEngine", "StorePlane",
+    "json_safe",
 ]

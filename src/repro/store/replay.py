@@ -50,10 +50,18 @@ class ReplayEngine:
     """
 
     def __init__(self, *, journal=None, log=None, analytics=None,
-                 dedup_window: int = 1 << 16, interpret=None):
+                 dedup_window: int = 1 << 16, interpret=None,
+                 columnar_lanes: Optional[bool] = None):
         self.journal = journal
         self.log = log
         self.analytics = analytics
+        # columnar fast path: when the log is a ColumnarEventLog,
+        # ``replay_log`` reads column lanes instead of per-record
+        # payloads.  Lane semantics equal the pipeline's DEFAULT
+        # key/time/value extractors — pass ``columnar_lanes=False`` if
+        # this engine's AnalyticsStage uses custom extractors.  None
+        # (the default) auto-enables iff the log grows ``scan_lanes``.
+        self.columnar_lanes = columnar_lanes
         self.dedup = DedupWindow(dedup_window)
         self.interpret = interpret
         self._lock = threading.Lock()
@@ -196,13 +204,61 @@ class ReplayEngine:
             self.stats["alerts"] += len(fired)
         return aggs, fired
 
+    def replay_columns(self, lanes, *,
+                       watermark: Optional[float] = None) -> tuple:
+        """Run column lanes (``ColumnarEventLog.scan_lanes`` output)
+        through pack_columns -> window_reduce -> the live RuleEngine —
+        the zero-per-record-Python twin of ``replay_events``."""
+        if self.analytics is None:
+            raise RuntimeError("no AnalyticsStage attached")
+        from repro.alerts.batch import reduce_columns
+
+        spec = self.analytics.operator.spec
+        ctx = (contextlib.nullcontext() if self.tracer is None
+               else self.tracer.span("replay.columns",
+                                     attrs={"events": lanes.count}))
+        with ctx:
+            aggs = reduce_columns(lanes.ts, lanes.key_codes, lanes.values,
+                                  lanes.key_vocab, spec,
+                                  interpret=self.interpret,
+                                  profiler=self.profiler)
+            wm = watermark if watermark is not None \
+                else self.analytics.operator.watermark
+            for a in aggs:
+                a.closed_at_watermark = wm
+            with self.profiler.stage("state_merge"):
+                fired = self.analytics.engine.process(aggs)
+                export = getattr(self.analytics, "export_closed", None)
+                if export is not None:
+                    export(aggs, wm)
+        with self._lock:
+            self.stats["events_replayed"] += lanes.count
+            self.stats["aggregates"] += len(aggs)
+            self.stats["alerts"] += len(fired)
+        return aggs, fired
+
     def replay_log(self, from_offset: int = 0, *,
-                   watermark: Optional[float] = None) -> dict:
+                   watermark: Optional[float] = None,
+                   columnar: Optional[bool] = None) -> dict:
         """Replay a document-log range through the batch path (the
         backfill read of the unified log: same records the live path
-        consumed, re-aggregated at kernel speed)."""
+        consumed, re-aggregated at kernel speed).  On a columnar log
+        the scan itself is columnar — sealed segments decode straight
+        into numpy lanes, no per-record Python (``columnar`` overrides
+        the engine-level ``columnar_lanes`` gate)."""
         if self.log is None:
             raise RuntimeError("no EventLog attached")
+        use = columnar if columnar is not None else (
+            self.columnar_lanes if self.columnar_lanes is not None
+            else hasattr(self.log, "scan_lanes"))
+        if use and hasattr(self.log, "scan_lanes"):
+            with self.profiler.stage("decode"):   # columnar block scan
+                lanes = self.log.scan_lanes(from_offset)
+            last = self.log.next_offset - 1
+            aggs, fired = self.replay_columns(lanes, watermark=watermark)
+            return {"events": lanes.count, "aggregates": len(aggs),
+                    "alerts": len(fired), "last_offset": last,
+                    "columnar": True}
         stage = self.analytics
         events: List[Event] = []
         last = from_offset - 1
@@ -214,7 +270,8 @@ class ReplayEngine:
                 last = off
         aggs, fired = self.replay_events(events, watermark=watermark)
         return {"events": len(events), "aggregates": len(aggs),
-                "alerts": len(fired), "last_offset": last}
+                "alerts": len(fired), "last_offset": last,
+                "columnar": False}
 
     def replay_late_events(self, *, watermark: Optional[float] = None,
                            max_records: Optional[int] = None) -> dict:

@@ -302,6 +302,35 @@ def test_cold_range_query_parity_with_reference():
         pipe.close()
 
 
+def test_cold_range_query_parity_on_columnar_store():
+    """Same parity bar, columnar route: cold scans read block lanes
+    (block-stat pruned, vectorized pack) instead of per-record decode,
+    and the answer must match the pure-Python reference bit for bit."""
+    import tempfile
+    pipe = AlertMixPipeline(
+        PipelineConfig(num_sources=200, analytics=True, query=True,
+                       store_dir=tempfile.mkdtemp(), store_columnar=True,
+                       columnar_block_rows=64, segment_bytes=1 << 14,
+                       window_size_s=60.0, query_max_windows_per_key=5),
+        seed=0)
+    try:
+        pipe.run_for(2400.0)
+        st = pipe.query.status()
+        assert st["evicted_windows"] > 0 and st["floor"] > 0.0
+        assert pipe.query.engine.columnar_lanes is True
+        res = pipe.query.query(
+            AggQuery(channel="news", start=0.0, end=2400.0))
+        assert res.source == "mixed"
+        assert pipe.query.status()["cold_columnar"] == 1
+        got = {(p["start"], p["end"]): p["count"] for p in res.points}
+        assert got == _reference_counts(pipe, "news", 0.0, 2400.0)
+        # sealed segments really are columnar (the fast path ran on
+        # blocks, not a JSON fallback)
+        assert pipe.store_stats()["columnar"]["sealed_columnar_segments"] > 0
+    finally:
+        pipe.close()
+
+
 def test_cold_query_without_store_stays_hot_only():
     pipe = AlertMixPipeline(
         PipelineConfig(num_sources=100, analytics=True, query=True,

@@ -23,9 +23,10 @@ DISPATCH_EXTRA = {"queue_depth", "dropped", "handoff_p50_ms",
 CONNECTOR_KEYS = {"fetches", "items", "not_modified", "errors", "backoffs",
                   "deferred_s"}
 QUERY_KEYS = {"queries", "cache_hits", "cache_misses", "stale_rejected",
-              "cold_scans", "cold_events", "cache_entries", "staleness_s",
-              "hot_segments", "hot_keys", "watermark", "version", "floor",
-              "ingested_windows", "merged_windows", "evicted_windows"}
+              "cold_scans", "cold_events", "cold_columnar", "cache_entries",
+              "staleness_s", "hot_segments", "hot_keys", "watermark",
+              "version", "floor", "ingested_windows", "merged_windows",
+              "evicted_windows"}
 SLO_TOP_KEYS = {"enabled", "specs", "sample_interval_s", "burning_fast",
                 "burning_slow", "slos"}
 SLO_ENTRY_KEYS = {"indicator", "objective", "target", "window_s", "labels",

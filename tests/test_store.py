@@ -241,6 +241,7 @@ def test_listener_journal_hook_persists_every_publish(tmp_path):
 def test_reason_taxonomy_grammar():
     for r in ("mailbox_overflow", "malformed_item", "late_event",
               "delivery_failed:es", "delivery_failed:IndexSink[1]",
+              "store_cold_unavailable", "compaction_conflict",
               "unknown"):
         assert reason_in_taxonomy(r), r
     for r in ("delivery_failed:", "delivery_failed", "oops", ""):
