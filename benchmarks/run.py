@@ -24,6 +24,12 @@
                     throughput (>=100x asserted), queries/s under
                     1/16/64 async subscribers at the staleness bound,
                     cold-range replay parity (writes BENCH_query.json)
+  bench_chaos     — chaos plane: full fault-injection scenario matrix
+                    (every catalog scenario x 2 seeds) through the real
+                    five-plane stack; reports faults absorbed, virtual-
+                    vs-wall speedup, worst recovery latency; red runs
+                    persist the failing seed (writes BENCH_chaos.json
+                    + CHAOS_FAILURE.json on breach)
   bench_scaling   — source-count scaling + resizer ablation
   bench_serving   — continuous vs static batching (FeedRouter admission)
   bench_train     — CPU train-step throughput per model family
@@ -46,6 +52,7 @@ def main() -> None:
     from benchmarks import (
         bench_alertmix,
         bench_alerts,
+        bench_chaos,
         bench_delivery,
         bench_ingest,
         bench_obs,
@@ -60,8 +67,8 @@ def main() -> None:
     rows: list = []
     failures = 0
     for mod in (bench_alertmix, bench_ingest, bench_alerts, bench_delivery,
-                bench_store, bench_obs, bench_query, bench_scaling,
-                bench_serving,
+                bench_store, bench_obs, bench_query, bench_chaos,
+                bench_scaling, bench_serving,
                 bench_train, bench_roofline):
         try:
             mod.main(rows)

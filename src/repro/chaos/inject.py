@@ -1,0 +1,248 @@
+"""Deterministic fault injectors — chaos wrappers at each plane boundary.
+
+Every injector draws its decisions from a named stream of a single
+``FaultSchedule`` seed, and every time-dependent decision keys off the
+pipeline's VIRTUAL clock, so a whole faulted soak is bitwise
+reproducible from ``(scenario, seed)`` alone:
+
+  ChaosConnector    ingress faults: raised fetch errors and timeouts
+                    (``connector_error`` dead letters + registry
+                    backoff), duplicate batches (re-delivered guids the
+                    dedup window must absorb), cursor resets (etag +
+                    last-modified wiped, re-fetching a full window)
+  ChaosSink         egress faults: transient write failures, scheduled
+                    outage windows (virtual time), deterministic health
+                    flapping, optional wall-clock stalls.  Failures are
+                    atomic — a failed write delivers nothing — so the
+                    accounting ledger never sees a partial batch
+  ChaosObjectStore  cold-tier faults: cold-fetch outages (the product
+                    path dead-letters ``store_cold_unavailable`` and
+                    skips the segment) and torn puts (a partial object
+                    is left behind AND the put raises, the way a
+                    crashed multipart upload looks)
+
+Raised faults use ``ChaosFault``/``TimeoutError`` so scenario debugging
+can tell injected failures from real ones in journals and tracebacks.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import random
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.delivery.base import Sink
+from repro.store.columnar.tiering import ObjectStore, ObjectStoreError
+
+
+class ChaosFault(Exception):
+    """An injected fault (as opposed to a real one)."""
+
+
+class FaultSchedule:
+    """One seed -> many named deterministic RNG streams.
+
+    Each injector pulls its own stream (``schedule.rng("sink:chaos0")``)
+    so adding an injector — or reordering construction — never perturbs
+    the draws of another.  String seeding uses CPython's stable
+    byte-hash path, so streams are identical across processes and
+    PYTHONHASHSEED values.
+    """
+
+    def __init__(self, seed: int, *, scenario: str = ""):
+        self.seed = int(seed)
+        self.scenario = scenario
+        self._streams: Dict[str, random.Random] = {}
+
+    def rng(self, stream: str) -> random.Random:
+        r = self._streams.get(stream)
+        if r is None:
+            r = self._streams[stream] = random.Random(
+                f"{self.scenario}|{self.seed}|{stream}")
+        return r
+
+
+class ChaosConnector:
+    """Wraps any Connector with seeded ingress faults.
+
+    Registered under the inner connector's name, it is a drop-in: the
+    pipeline worker's existing ``connector_error`` path absorbs raised
+    fetches (dead letter + ``mark_failed`` backoff), and the dedup
+    window absorbs re-delivered guids from duplicate batches and cursor
+    resets — which is exactly the contract the ledger then asserts.
+    """
+
+    def __init__(self, inner, schedule: FaultSchedule, *,
+                 error_rate: float = 0.0, timeout_rate: float = 0.0,
+                 dup_batch_rate: float = 0.0,
+                 cursor_reset_rate: float = 0.0,
+                 name: Optional[str] = None):
+        self.inner = inner
+        self.name = name or inner.name
+        self.error_rate = error_rate
+        self.timeout_rate = timeout_rate
+        self.dup_batch_rate = dup_batch_rate
+        self.cursor_reset_rate = cursor_reset_rate
+        self._rng = schedule.rng(f"connector:{self.name}")
+        self._last_items: Dict[int, List] = {}
+        self.faults: collections.Counter = collections.Counter()
+
+    def reset_cache(self) -> None:
+        """Drop the duplicate-injection cache.  Called at crash/remount:
+        the platform's dedup window is in-memory, so re-delivering a
+        pre-crash batch to a fresh pipeline is outside the documented
+        exactly-once contract (cross-restart duplicate suppression is a
+        cursor property, not a dedup property)."""
+        self._last_items.clear()
+
+    def fetch(self, source, cursor, now: float):
+        r = self._rng
+        if self.error_rate and r.random() < self.error_rate:
+            self.faults["fetch_error"] += 1
+            raise ChaosFault(
+                f"injected fetch failure (source {source.sid})")
+        if self.timeout_rate and r.random() < self.timeout_rate:
+            self.faults["fetch_timeout"] += 1
+            raise TimeoutError(
+                f"injected fetch timeout (source {source.sid})")
+        if self.cursor_reset_rate and r.random() < self.cursor_reset_rate:
+            # a lost cursor re-reads the whole lookback window: same
+            # guids come back, and dedup must absorb every one
+            self.faults["cursor_reset"] += 1
+            source = dataclasses.replace(source, etag=None,
+                                         last_modified=None)
+            cursor = dataclasses.replace(cursor, etag=None,
+                                         last_modified=None, position=0)
+        res = self.inner.fetch(source, cursor, now)
+        if res.items:
+            current = list(res.items)
+            prev = self._last_items.get(source.sid)
+            if prev and self.dup_batch_rate \
+                    and r.random() < self.dup_batch_rate:
+                # an at-least-once upstream re-delivering the previous
+                # batch ahead of the new one
+                self.faults["dup_batch"] += 1
+                res.items = list(prev) + current
+            self._last_items[source.sid] = current
+        return res
+
+
+class ChaosSink(Sink):
+    """Terminal sink with schedule-driven failures.
+
+    Fault model (checked in order, all BEFORE any record is recorded,
+    so failures are atomic):
+
+      force_down      manual override for tests
+      outages         [(start, end)] virtual-time windows (``end`` may
+                      be ``inf`` for a permanent backend failure)
+      flap_every      deterministic health flapping: alternate runs of
+                      N successful and N failing writes (N >= the
+                      Sink's ``unhealthy_after`` makes health itself
+                      flap), until virtual time ``flap_until``
+      fail_rate       seeded transient failures
+      stall_s         wall-clock stall per accepted write (latency
+                      injection; keep 0 in determinism comparisons —
+                      only wall-clock histograms see it)
+
+    Accepted records are appended to ``records`` and reported to the
+    ledger — this sink is both the injection point and the ground truth
+    for terminal delivery.
+    """
+
+    def __init__(self, name: str, schedule: FaultSchedule, *, clock,
+                 fail_rate: float = 0.0,
+                 outages: Sequence[Tuple[float, float]] = (),
+                 flap_every: int = 0, flap_until: float = float("inf"),
+                 stall_s: float = 0.0, ledger=None):
+        super().__init__(name)
+        self._rng = schedule.rng(f"sink:{name}")
+        self.clock = clock
+        self.fail_rate = fail_rate
+        self.outages = list(outages)
+        self.flap_every = flap_every
+        self.flap_until = flap_until
+        self.stall_s = stall_s
+        self.ledger = ledger
+        self.force_down = False
+        self.fail_next = 0      # scripted: fail exactly the next N writes
+        self.records: List = []
+        self.writes = 0
+        self.faults: collections.Counter = collections.Counter()
+
+    def _write(self, batch: List) -> None:
+        self.writes += 1
+        now = self.clock()
+        if self.force_down:
+            self.faults["forced"] += 1
+            raise ChaosFault(f"{self.name}: forced down")
+        if self.fail_next > 0:
+            self.fail_next -= 1
+            self.faults["scripted"] += 1
+            raise ChaosFault(f"{self.name}: scripted failure")
+        for start, end in self.outages:
+            if start <= now < end:
+                self.faults["outage"] += 1
+                raise ChaosFault(
+                    f"{self.name}: outage window [{start}, {end}) "
+                    f"at t={now}")
+        if (self.flap_every and now < self.flap_until
+                and (self.writes // self.flap_every) % 2 == 1):
+            self.faults["flap"] += 1
+            raise ChaosFault(f"{self.name}: flapping (write "
+                             f"{self.writes})")
+        if self.fail_rate and self._rng.random() < self.fail_rate:
+            self.faults["transient"] += 1
+            raise ChaosFault(f"{self.name}: transient write failure")
+        if self.stall_s:
+            time.sleep(self.stall_s)
+        self.records.extend(batch)
+        if self.ledger is not None:
+            self.ledger.on_delivered(self.name, batch)
+
+    def delivered_guids(self) -> List[str]:
+        return [r[0] for r in self.records]
+
+
+class ChaosObjectStore(ObjectStore):
+    """Wraps an ObjectStore with cold-tier faults.
+
+    ``get`` failures exercise the transparent-cold-fetch error path
+    (``store_cold_unavailable`` dead letter, segment skipped, reader
+    never wedged).  Torn puts leave a PARTIAL object behind and raise —
+    the offload must treat the put as failed (manifest uncommitted,
+    local copy kept) and a later retry must overwrite the partial
+    object, or the manifest-is-source-of-truth invariant is broken.
+    """
+
+    def __init__(self, inner: ObjectStore, schedule: FaultSchedule, *,
+                 get_fail_rate: float = 0.0, torn_put_rate: float = 0.0):
+        self.inner = inner
+        self.get_fail_rate = get_fail_rate
+        self.torn_put_rate = torn_put_rate
+        self._rng = schedule.rng("objectstore")
+        self.faults: collections.Counter = collections.Counter()
+
+    def put(self, key: str, data: bytes) -> None:
+        if self.torn_put_rate and self._rng.random() < self.torn_put_rate:
+            self.faults["torn_put"] += 1
+            self.inner.put(key, data[:max(1, len(data) // 2)])
+            raise ObjectStoreError(f"injected torn put for {key!r}")
+        self.inner.put(key, data)
+
+    def get(self, key: str) -> bytes:
+        if self.get_fail_rate and self._rng.random() < self.get_fail_rate:
+            self.faults["cold_get"] += 1
+            raise ObjectStoreError(
+                f"injected cold-store outage for {key!r}")
+        return self.inner.get(key)
+
+    def delete(self, key: str) -> None:
+        self.inner.delete(key)
+
+    def exists(self, key: str) -> bool:
+        return self.inner.exists(key)
+
+    def list(self) -> List[str]:
+        return self.inner.list()

@@ -1,0 +1,174 @@
+"""ChaosLedger — the cross-plane accounting invariant checker.
+
+The zero-loss contract the store plane promises, stated as set algebra
+per delivery backend:
+
+    delivered_once(b) ∪ dead_lettered(b) ∪ stranded(b)  =  accepted
+    delivered(b) counts are all exactly 1          (no terminal dups)
+    every dead-letter reason ∈ REASON_FAMILIES     (taxonomy closed)
+    no guid accepted more than once                (ingest dedup holds)
+
+``accepted`` is captured at the durable append (the tee around
+``StorePlane.append_documents`` — a doc is "accepted" exactly when the
+platform wrote it to the EventLog), ``delivered`` at the terminal
+``ChaosSink._write`` (past every wrapper), and ``dead_lettered`` from
+the ``DeadLettersListener.subscribe`` hook (the complete stream, not
+the replay-truncated journal).  ``stranded`` is only ever populated by
+the hard-crash driver: records in flight inside delivery buffers when
+the process dies are not silently lost — the driver proves each one is
+still readable from the remounted EventLog before parking it there.
+
+A violation raises ``ChaosInvariantError`` whose message embeds the
+scenario name and seed, so any red run is reproducible from the printed
+line alone.
+"""
+from __future__ import annotations
+
+import collections
+import json
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.dead_letters import reason_in_taxonomy
+
+
+class ChaosInvariantError(AssertionError):
+    """A cross-plane invariant failed under chaos.  The message always
+    carries ``scenario=<name> seed=<seed>`` — rerunning
+    ``run_scenario(name, seed=seed)`` reproduces the failure exactly."""
+
+
+def _guid_of(msg) -> Optional[str]:
+    """Dead-letter msgs for delivery failures are the individual
+    ``(guid, doc)`` records; anything else is not doc-level."""
+    if isinstance(msg, (tuple, list)) and len(msg) == 2 \
+            and isinstance(msg[0], str):
+        return msg[0]
+    return None
+
+
+class ChaosLedger:
+    def __init__(self, *, scenario: str = "", seed: int = 0,
+                 backends: Tuple[str, ...] = ()):
+        self.scenario = scenario
+        self.seed = seed
+        self.backends = tuple(backends)
+        # ingest/store side
+        self.accepted: Dict[str, dict] = {}
+        self.accept_counts: collections.Counter = collections.Counter()
+        # delivery side, per backend
+        self.delivered: Dict[str, collections.Counter] = {
+            b: collections.Counter() for b in backends}
+        self.dead: Dict[str, collections.Counter] = {
+            b: collections.Counter() for b in backends}
+        self.stranded: Dict[str, Set[str]] = {b: set() for b in backends}
+        # non-doc-level dead letters, by reason
+        self.dead_other: collections.Counter = collections.Counter()
+        self.bad_reasons: List[str] = []
+        # ordered fingerprint of the full dead-letter stream
+        self.dead_log: List[Tuple[str, str]] = []
+        self.violations: List[str] = []
+
+    # ---- capture hooks -------------------------------------------------
+
+    def on_accepted(self, batch) -> None:
+        """Tee on StorePlane.append_documents: batch of (guid, doc)."""
+        for guid, doc in batch:
+            self.accept_counts[guid] += 1
+            self.accepted[guid] = doc
+
+    def on_delivered(self, backend: str, batch) -> None:
+        """Called by ChaosSink._write AFTER the write succeeded."""
+        c = self.delivered.setdefault(backend, collections.Counter())
+        for rec in batch:
+            c[_guid_of(rec) or repr(rec)] += 1
+
+    def on_dead_letter(self, reason: str, msg) -> None:
+        """DeadLettersListener.subscribe hook: the complete stream."""
+        if not reason_in_taxonomy(reason):
+            self.bad_reasons.append(reason)
+        self.dead_log.append((reason, json.dumps(msg, sort_keys=True,
+                                                 default=repr)))
+        for prefix in ("delivery_failed:", "dispatch_overflow:"):
+            if reason.startswith(prefix):
+                backend = reason[len(prefix):]
+                guid = _guid_of(msg)
+                if guid is not None:
+                    self.dead.setdefault(
+                        backend, collections.Counter())[guid] += 1
+                    return
+        self.dead_other[reason] += 1
+
+    def strand(self, backend: str, guids) -> None:
+        self.stranded.setdefault(backend, set()).update(guids)
+
+    # ---- invariants ----------------------------------------------------
+
+    def pending_for(self, backend: str, in_flight: Set[str]) -> Set[str]:
+        """Accepted guids with no terminal outcome yet on ``backend``
+        (used by the crash driver to compute the stranded set;
+        ``in_flight`` excludes nothing — pass empty for the raw gap)."""
+        return {g for g in self.accepted
+                if not self.delivered.get(backend, {}).get(g)
+                and not self.dead.get(backend, {}).get(g)
+                and g not in self.stranded.get(backend, set())
+                and g not in in_flight}
+
+    def check(self) -> None:
+        """Assert the full contract; raise ChaosInvariantError listing
+        every violation (bounded samples) on failure."""
+        v = list(self.violations)
+        dup_accepts = [g for g, n in self.accept_counts.items() if n > 1]
+        if dup_accepts:
+            v.append(f"{len(dup_accepts)} guids accepted more than once "
+                     f"(dedup breach), e.g. {sorted(dup_accepts)[:3]}")
+        if self.bad_reasons:
+            v.append(f"dead-letter reasons outside REASON_FAMILIES: "
+                     f"{sorted(set(self.bad_reasons))[:5]}")
+        for b in self.backends:
+            delivered = self.delivered.get(b, {})
+            dead = self.dead.get(b, {})
+            stranded = self.stranded.get(b, set())
+            dups = [g for g, n in delivered.items() if n > 1]
+            if dups:
+                v.append(f"[{b}] {len(dups)} guids terminal-delivered "
+                         f"more than once, e.g. {sorted(dups)[:3]}")
+            ghosts = [g for g in delivered if g not in self.accepted]
+            if ghosts:
+                v.append(f"[{b}] {len(ghosts)} delivered guids never "
+                         f"accepted, e.g. {sorted(ghosts)[:3]}")
+            lost = [g for g in self.accepted
+                    if not delivered.get(g) and not dead.get(g)
+                    and g not in stranded]
+            if lost:
+                v.append(f"[{b}] {len(lost)} accepted guids silently "
+                         f"lost (neither delivered, dead-lettered, nor "
+                         f"stranded), e.g. {sorted(lost)[:3]}")
+        if v:
+            raise ChaosInvariantError(
+                f"chaos invariants violated — reproduce with "
+                f"run_scenario({self.scenario!r}, seed={self.seed}):\n  "
+                + "\n  ".join(v))
+
+    # ---- reporting -----------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "accepted": len(self.accepted),
+            "delivered": {b: sum(c.values())
+                          for b, c in self.delivered.items()},
+            "dead_lettered": {b: len(c) for b, c in self.dead.items()},
+            "stranded": {b: len(s) for b, s in self.stranded.items()},
+            "dead_other": dict(self.dead_other),
+            "dead_letters_total": len(self.dead_log),
+        }
+
+    def fingerprint(self) -> dict:
+        """Deterministic digest of everything doc-level the run did, for
+        the identical-seed regression: ordered per-backend delivery
+        streams + the ordered dead-letter stream."""
+        return {
+            "delivered": {b: sorted((g, n) for g, n in c.items())
+                          for b, c in self.delivered.items()},
+            "dead_log": list(self.dead_log),
+            "accepted_guids": sorted(self.accepted),
+        }

@@ -1,0 +1,129 @@
+"""Declarative chaos scenario catalog.
+
+A ``Scenario`` is pure data: pipeline shape, fault rates, crash plan,
+and which optional checkers apply.  ``SCENARIOS`` is the catalog the
+SoakRunner and the tier-1 smoke matrix iterate; every entry must uphold
+the ledger invariants at every seed (a red scenario prints the
+``run_scenario(name, seed)`` line that reproduces it).
+
+Durations are VIRTUAL seconds — the catalog's ~30 virtual minutes per
+scenario run in well under a second of wall time, which is what lets
+tier-1 afford a scenarios x seeds matrix and CI afford hour-scale
+soaks of the same definitions (``soak_scale``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str = ""
+    # ---- shape (virtual time / load) ----
+    duration_s: float = 1800.0      # virtual soak length
+    dt_s: float = 5.0               # step size
+    num_sources: int = 10
+    feed_interval_s: float = 60.0
+    rate_per_hour: float = 120.0    # per-source item rate
+    backends: Tuple[str, ...] = ("chaos0",)
+    # ---- ingress faults (ChaosConnector) ----
+    error_rate: float = 0.0
+    timeout_rate: float = 0.0
+    dup_batch_rate: float = 0.0
+    cursor_reset_rate: float = 0.0
+    # ---- egress faults (ChaosSink; applied to backends[0], the rest
+    # stay clean so fan-out isolation is exercised too) ----
+    fail_rate: float = 0.0
+    outage: Optional[Tuple[float, float]] = None   # fractions of duration
+    flap_every: int = 0
+    flap_until_frac: float = 0.0
+    # ---- store shape + cold-tier faults ----
+    columnar: bool = False
+    segment_bytes: int = 1 << 20
+    block_rows: int = 256
+    compact_interval_s: Optional[float] = None
+    retention_max_bytes: Optional[int] = None
+    offload: bool = False
+    offload_keep_local: int = 2
+    get_fail_rate: float = 0.0
+    torn_put_rate: float = 0.0
+    # ---- crash plan: (fraction_of_duration, "soft"|"hard") ----
+    crashes: Tuple[Tuple[float, str], ...] = ()
+    torn_tail: bool = False         # chop active-segment bytes at soft crash
+    # ---- checks ----
+    check_parity: bool = True       # hot/cold query vs ledger ground truth
+
+    def scaled(self, factor: float) -> "Scenario":
+        """Same faults, ``factor``x the virtual duration (long CI soak)."""
+        from dataclasses import replace
+        return replace(self, duration_s=self.duration_s * factor)
+
+
+def _cat(*scenarios: Scenario) -> Dict[str, Scenario]:
+    return {s.name: s for s in scenarios}
+
+
+SCENARIOS: Dict[str, Scenario] = _cat(
+    Scenario(
+        "baseline_soak",
+        description="no injected faults — the control run every other "
+                    "scenario's ledger is compared against",
+        columnar=True),
+    Scenario(
+        "connector_flood",
+        description="hostile upstreams: fetch errors, timeouts, "
+                    "re-delivered batches, lost cursors; dedup + "
+                    "connector_error backoff must absorb all of it",
+        error_rate=0.25, timeout_rate=0.10,
+        dup_batch_rate=0.30, cursor_reset_rate=0.20),
+    Scenario(
+        "backend_outage_replay",
+        description="one backend dark for a quarter of the run; retries "
+                    "exhaust into delivery_failed dead letters, and the "
+                    "health-flip auto-replay must converge the backlog "
+                    "to zero after recovery",
+        backends=("chaos0", "steady"),
+        outage=(0.25, 0.50), check_parity=True),
+    Scenario(
+        "backend_flapping",
+        description="rapid False->True->False health flapping (runs of "
+                    "4 failures/4 successes) racing the auto-replay "
+                    "trigger — the double-delivery hunting ground",
+        flap_every=4, flap_until_frac=0.70, fail_rate=0.05),
+    Scenario(
+        "compaction_truncate_race",
+        description="tiny segments + keyed compaction + bytes retention "
+                    "all churning while queries and replay read the log",
+        columnar=True, segment_bytes=4096, block_rows=64,
+        compact_interval_s=60.0, retention_max_bytes=256 * 1024),
+    Scenario(
+        "cold_store_outage",
+        description="aggressive offload with a half-dead object store: "
+                    "torn puts must keep segments local, cold-fetch "
+                    "failures must dead-letter store_cold_unavailable "
+                    "and never wedge a reader",
+        columnar=True, segment_bytes=4096, block_rows=64,
+        offload=True, offload_keep_local=1,
+        get_fail_rate=0.50, torn_put_rate=0.30),
+    Scenario(
+        "crash_storm",
+        description="three crash/remount cycles, each with a torn "
+                    "active-segment tail; store must recover and the "
+                    "ledger must balance across incarnations",
+        columnar=True, segment_bytes=8192,
+        crashes=((0.30, "soft"), (0.55, "soft"), (0.80, "soft")),
+        torn_tail=True, check_parity=False),
+    Scenario(
+        "hard_crash",
+        description="kill -9 analogue: no flush, delivery buffers lost "
+                    "mid-flight; every stranded record must still be "
+                    "readable from the remounted log (durable-but-"
+                    "undelivered, never silently lost)",
+        fail_rate=0.05, outage=(0.45, 0.55),
+        crashes=((0.50, "hard"),), check_parity=False),
+)
+
+#: the subset × seeds tier-1 runs (ISSUE acceptance: >= 6 × >= 2)
+SMOKE_SEEDS = (0, 1)

@@ -1,0 +1,396 @@
+"""SoakRunner: drive the full five-plane stack through a Scenario.
+
+One runner owns one scenario x seed: it mounts the real
+``AlertMixPipeline`` (ingest -> pipeline -> store -> query -> delivery)
+on a scratch store directory, swaps the chaos injectors in at each
+plane boundary, steps virtual time to the scenario's horizon while the
+crash driver kills and remounts the pipeline on schedule, and asserts
+the cross-plane invariants as it goes:
+
+  ledger            accepted = delivered-once ∪ dead-lettered ∪ stranded,
+                    per backend; zero terminal duplicates; reasons stay
+                    inside REASON_FAMILIES   (ChaosLedger.check)
+  store consistency reopen never raises, a full scan yields strictly
+                    increasing offsets, ``next_offset`` respects the
+                    truncation floor — after EVERY crash-remount and at
+                    the end
+  watermark         the analytics watermark never regresses, across
+                    remounts included
+  query parity      hot/materialized query counts equal the ledger's
+                    ground truth over every closed window (non-crash
+                    scenarios — a crash legitimately forgets open
+                    windows)
+  schema stability  status()/stats() key sets never change mid-soak
+                    (monitoring contracts hold under faults)
+  recovery          after an outage/flap window ends, the
+                    delivery_failed backlog + retry parkings converge
+                    to zero; the virtual latency is reported
+
+Everything is virtual-time and single-seeded: ``run_scenario(name,
+seed=s)`` is bitwise reproducible, and every ChaosInvariantError
+message embeds that reproduction line.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, List, Optional, Set
+
+from repro.core.pipeline import AlertMixPipeline, PipelineConfig
+
+from .inject import (ChaosConnector, ChaosObjectStore, ChaosSink,
+                     FaultSchedule)
+from .ledger import ChaosInvariantError, ChaosLedger
+from .scenarios import SCENARIOS, Scenario
+
+
+class SoakRunner:
+    def __init__(self, scenario: Scenario, *, seed: int = 0,
+                 base_dir: Optional[str] = None):
+        self.sc = scenario
+        self.seed = seed
+        self.schedule = FaultSchedule(seed, scenario=scenario.name)
+        self._own_dir = base_dir is None
+        self.base_dir = base_dir or tempfile.mkdtemp(
+            prefix=f"chaos-{scenario.name}-{seed}-")
+        self.store_dir = os.path.join(self.base_dir, "store")
+        self.offload_dir = (os.path.join(self.base_dir, "cold")
+                            if scenario.offload else None)
+        self.ledger = ChaosLedger(scenario=scenario.name, seed=seed,
+                                  backends=scenario.backends)
+        dur = scenario.duration_s
+        self.sinks: List[ChaosSink] = []
+        for i, name in enumerate(scenario.backends):
+            if i == 0:        # faults hit the first backend; the rest
+                              # stay clean so fan-out isolation shows
+                outages = ([(scenario.outage[0] * dur,
+                             scenario.outage[1] * dur)]
+                           if scenario.outage else [])
+                self.sinks.append(ChaosSink(
+                    name, self.schedule, clock=self._now,
+                    fail_rate=scenario.fail_rate, outages=outages,
+                    flap_every=scenario.flap_every,
+                    flap_until=scenario.flap_until_frac * dur,
+                    ledger=self.ledger))
+            else:
+                self.sinks.append(ChaosSink(
+                    name, self.schedule, clock=self._now,
+                    ledger=self.ledger))
+        self.pipeline: Optional[AlertMixPipeline] = None
+        self.connector: Optional[ChaosConnector] = None
+        self.objstore: Optional[ChaosObjectStore] = None
+        self.crashes = 0
+        self.recovery_latency_s: Optional[float] = None
+        self._recover_target: Optional[float] = None
+        if scenario.outage:
+            self._recover_target = scenario.outage[1] * dur
+        elif scenario.flap_every:
+            self._recover_target = scenario.flap_until_frac * dur
+        self._wm_last = float("-inf")
+        self._wm_flagged = False
+        self._schema_keys = None
+        self.checks_passed: List[str] = []
+
+    # ---- wiring --------------------------------------------------------
+
+    def _now(self) -> float:
+        return self.pipeline.now if self.pipeline is not None else 0.0
+
+    def _mount(self, snap: Optional[dict]) -> None:
+        sc = self.sc
+        cfg = PipelineConfig(
+            num_sources=sc.num_sources,
+            feed_interval_s=sc.feed_interval_s,
+            query=True, query_staleness_s=None,
+            store_dir=self.store_dir,
+            store_columnar=sc.columnar,
+            segment_bytes=sc.segment_bytes,
+            columnar_block_rows=sc.block_rows,
+            compact_interval_s=sc.compact_interval_s,
+            retention_max_bytes=sc.retention_max_bytes,
+            offload_dir=self.offload_dir,
+            offload_keep_local=sc.offload_keep_local,
+            delivery_dispatch=False)       # serial = fully deterministic
+        p = AlertMixPipeline(cfg, seed=self.seed, sinks=self.sinks)
+        # load shaping: the simulator's defaults are demo-scale; chaos
+        # soaks need real volume, and injected dup batches replace the
+        # simulator's own syndication (whose shared guids could recur
+        # outside a fresh remount's dedup window)
+        p.sim.base_rate = sc.rate_per_hour
+        p.sim.dup_fraction = 0.0
+        # ingress: chaos connector takes over the "sim" registration;
+        # the ONE ChaosConnector instance survives remounts so its RNG
+        # stream and fault counters span the whole soak
+        if self.connector is None:
+            self.connector = ChaosConnector(
+                p.connectors.get("sim"), self.schedule,
+                error_rate=sc.error_rate, timeout_rate=sc.timeout_rate,
+                dup_batch_rate=sc.dup_batch_rate,
+                cursor_reset_rate=sc.cursor_reset_rate)
+        else:
+            self.connector.inner = p.connectors.get("sim")
+            self.connector.reset_cache()
+        p.connectors.register(self.connector)
+        # store: tee the durable append — "accepted" means "in the log"
+        orig_append = p.store.append_documents
+        ledger = self.ledger
+
+        def tee(batch, _orig=orig_append, _led=ledger):
+            _orig(batch)
+            _led.on_accepted(batch)
+
+        p.store.append_documents = tee
+        p.dead_letters.subscribe(ledger.on_dead_letter)
+        # cold tier: wrap the pipeline's own object store (kept for
+        # recovery) with the fault injector
+        if self.offload_dir is not None:
+            if self.objstore is None:
+                self.objstore = ChaosObjectStore(
+                    p.store.log.object_store, self.schedule,
+                    get_fail_rate=sc.get_fail_rate,
+                    torn_put_rate=sc.torn_put_rate)
+            else:
+                self.objstore.inner = p.store.log.object_store
+            p.store.log.object_store = self.objstore
+        if snap is not None:
+            p.restore_registry(snap)
+        self.pipeline = p
+
+    # ---- invariants ----------------------------------------------------
+
+    def _violate(self, msg: str) -> None:
+        self.ledger.violations.append(msg)
+
+    def _pending(self, backend: str) -> int:
+        p = self.pipeline
+        env = next(b for b in p.fan_out.backends
+                   if b.terminal.name == backend)
+        parked = getattr(env, "pending_records", 0)
+        backlog = p.store.journal.pending().get(
+            f"delivery_failed:{backend}", 0)
+        return parked + backlog
+
+    def check_store(self) -> Set[str]:
+        """Full-scan consistency: never raises, offsets strictly
+        increase, truncation floor respected.  Returns the doc-id set
+        (the crash driver proves stranded records against it)."""
+        log = self.pipeline.store.log
+        last = -1
+        ids: Set[str] = set()
+        try:
+            for off, payload in log.scan():
+                if off <= last:
+                    self._violate(f"store scan offsets not strictly "
+                                  f"increasing at {off} (prev {last})")
+                    break
+                last = off
+                if isinstance(payload, dict) and "id" in payload:
+                    ids.add(payload["id"])
+        except Exception as exc:
+            self._violate(f"store scan raised {exc!r}")
+        if log.next_offset < log.truncated_through:
+            self._violate(f"next_offset {log.next_offset} below "
+                          f"truncation floor {log.truncated_through}")
+        return ids
+
+    def _observe_step(self) -> None:
+        p = self.pipeline
+        # watermark monotonicity (skip the fresh -inf after a remount)
+        wm = p.analytics.operator.watermark
+        if wm != float("-inf"):
+            if wm < self._wm_last - 1e-9 and not self._wm_flagged:
+                self._wm_flagged = True
+                self._violate(f"watermark regressed: {wm} after "
+                              f"{self._wm_last}")
+            self._wm_last = max(self._wm_last, wm)
+        # recovery convergence latency after the fault window closes
+        if (self._recover_target is not None
+                and self.recovery_latency_s is None
+                and p.now >= self._recover_target
+                and all(self._pending(b) == 0 for b in self.sc.backends)):
+            self.recovery_latency_s = p.now - self._recover_target
+
+    def _check_schema(self) -> None:
+        p = self.pipeline
+        keys = (tuple(sorted(p.store.status())),
+                tuple(sorted(p.delivery_stats())),
+                tuple(sorted(p.dead_letters.snapshot())))
+        if self._schema_keys is None:
+            self._schema_keys = keys
+        elif keys != self._schema_keys:
+            self._violate(f"status schema changed mid-soak: "
+                          f"{keys} != {self._schema_keys}")
+
+    def _check_parity(self) -> None:
+        """Materialized query counts == ledger ground truth over every
+        closed window.  Late events re-entered the rule state via the
+        flush-time batch replay, so closed-window counts must be exact."""
+        from repro.query import AggQuery
+        p = self.pipeline
+        wm = p.analytics.operator.watermark
+        if wm == float("-inf"):
+            return
+        size = p.cfg.window_size_s
+        end = size * math.floor((wm - p.cfg.allowed_lateness_s) / size)
+        if end <= 0:
+            return
+        truth: Dict[str, int] = {}
+        for doc in self.ledger.accepted.values():
+            if 0.0 <= doc["published_at"] < end:
+                ch = doc["channel"]
+                truth[ch] = truth.get(ch, 0) + 1
+        for ch, n in sorted(truth.items()):
+            got = int(sum(p.query.query(
+                AggQuery(ch, 0.0, end, agg="count")).values()))
+            if got != n:
+                self._violate(f"query parity: channel {ch!r} counted "
+                              f"{got}, ledger ground truth {n} "
+                              f"(closed horizon {end})")
+
+    # ---- crash driver --------------------------------------------------
+
+    def _crash(self, kind: str) -> None:
+        """close()-less teardown + remount.  ``soft`` flushes first (a
+        graceful-ish restart); ``hard`` drops the pipeline mid-flight —
+        records inside delivery buffers are stranded, and each one must
+        still be readable from the remounted log."""
+        p = self.pipeline
+        assert p is not None
+        if kind == "soft":
+            p.flush_delivery()
+        snap = p.snapshot()
+        log = p.store.log
+        active = (os.path.join(log.dir, log._active_name)
+                  if log._active_name else None)
+        # records with no terminal outcome are about to be lost from
+        # the delivery plane (fresh envelopes forget parked batches):
+        # park them as stranded, pending proof they survived in the log
+        stranded = {b: self.ledger.pending_for(b, set())
+                    for b in self.sc.backends}
+        self.pipeline = None        # no close(): refcount drop is the
+        del p, log                  # whole teardown, like a died process
+        if kind == "soft" and self.sc.torn_tail and active \
+                and os.path.exists(active):
+            size = os.path.getsize(active)
+            if size > 128:          # chop mid-record: the reopen must
+                                    # truncate the torn tail, and every
+                                    # chopped record was already flushed
+                with open(active, "r+b") as fh:
+                    fh.truncate(size - 97)
+        self._mount(snap)
+        self.crashes += 1
+        ids = self.check_store()    # consistency after EVERY reopen
+        for b, guids in sorted(stranded.items()):
+            lost = guids - ids
+            if lost:
+                self._violate(
+                    f"[{b}] {len(lost)} in-flight records missing from "
+                    f"the remounted log (silently lost in crash), e.g. "
+                    f"{sorted(lost)[:3]}")
+            self.ledger.strand(b, guids & ids)
+
+    # ---- main loop -----------------------------------------------------
+
+    def run(self) -> dict:
+        sc = self.sc
+        t_wall = time.perf_counter()
+        try:
+            self._mount(None)
+            plan = sorted((f * sc.duration_s, kind)
+                          for f, kind in sc.crashes)
+            steps = 0
+            sample_every = max(1, int(60 / sc.dt_s))
+            while self.pipeline.now < sc.duration_s:
+                while plan and self.pipeline.now >= plan[0][0]:
+                    self._crash(plan.pop(0)[1])
+                self.pipeline.step(sc.dt_s)
+                steps += 1
+                self._observe_step()
+                if steps % sample_every == 0:
+                    self._check_schema()
+                    # reader workload: a full scan every virtual minute
+                    # races compaction/truncation/offload and exercises
+                    # the transparent cold-fetch path under injection
+                    self.check_store()
+            # drain: flush, then give retry backoff a few extra ticks
+            # to converge any residual parked batches
+            self.pipeline.flush_delivery()
+            for _ in range(8):
+                if all(self._pending(b) == 0 for b in sc.backends):
+                    break
+                self.pipeline.step(sc.dt_s)
+                steps += 1
+                self._observe_step()
+                self.pipeline.flush_delivery()
+            self._check_schema()
+            if sc.check_parity and not sc.crashes:
+                self._check_parity()
+                self.checks_passed.append("query_parity")
+            if self.objstore is not None:
+                # final readability proof: with injection off, every
+                # cold segment must decode (torn puts never became
+                # manifest-committed cold objects)
+                self.objstore.get_fail_rate = 0.0
+            self.check_store()
+            fp = hashlib.sha256(json.dumps(
+                {"ledger": self.ledger.fingerprint(),
+                 "registry": self.pipeline.snapshot()},
+                sort_keys=True, default=repr).encode()).hexdigest()
+            # ordered teardown: delivery first, so batches parked at a
+            # still-dark backend become delivery_failed dead letters
+            # while the journal is open — the books must CLOSE
+            self.pipeline.delivery.close()
+            self.pipeline.store.close()
+            self.pipeline.obs.close()
+            self.ledger.check()
+            self.checks_passed[:0] = ["ledger", "store_consistency",
+                                      "watermark_monotonic",
+                                      "schema_stability"]
+            if self.crashes:
+                self.checks_passed.append("crash_recovery")
+            if self._recover_target is not None:
+                if self.recovery_latency_s is None:
+                    raise ChaosInvariantError(
+                        f"backlog never converged after the fault "
+                        f"window — reproduce with run_scenario("
+                        f"{sc.name!r}, seed={self.seed})")
+                self.checks_passed.append("recovery_convergence")
+            return {
+                "scenario": sc.name,
+                "seed": self.seed,
+                "virtual_s": sc.duration_s,
+                "steps": steps,
+                "wall_s": round(time.perf_counter() - t_wall, 3),
+                "crashes": self.crashes,
+                "recovery_latency_s": self.recovery_latency_s,
+                "ledger": self.ledger.stats(),
+                "faults": {
+                    "connector": dict(self.connector.faults),
+                    "sinks": {s.name: dict(s.faults)
+                              for s in self.sinks},
+                    "object_store": (dict(self.objstore.faults)
+                                     if self.objstore else {}),
+                },
+                "checks_passed": list(self.checks_passed),
+                "fingerprint": fp,
+            }
+        finally:
+            if self._own_dir:
+                shutil.rmtree(self.base_dir, ignore_errors=True)
+
+
+def run_scenario(name: str, seed: int = 0, *,
+                 duration_scale: float = 1.0,
+                 base_dir: Optional[str] = None) -> dict:
+    """Run one catalog scenario to completion and return its report.
+    Raises ChaosInvariantError (message embeds this exact call) if any
+    cross-plane invariant breaks."""
+    sc = SCENARIOS[name]
+    if duration_scale != 1.0:
+        sc = sc.scaled(duration_scale)
+    return SoakRunner(sc, seed=seed, base_dir=base_dir).run()

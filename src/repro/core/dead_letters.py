@@ -71,6 +71,17 @@ class DeadLettersListener:
         self.total = 0
         self.recent: Deque[Tuple[str, object]] = collections.deque(maxlen=keep_last)
         self.alerts: List[str] = []
+        self._subscribers: List[Callable[[str, object], None]] = []
+
+    def subscribe(self, fn: Callable[[str, object], None]) -> None:
+        """Register ``fn(reason, msg)`` to observe every publish, in
+        publish order, outside the stats lock.  Unlike scanning the
+        journal afterwards (whose content is truncated as replay
+        cursors advance), a subscriber sees the complete dead-letter
+        stream — the chaos harness's accounting ledger hangs off this.
+        Subscribers must not raise; a raising subscriber is dropped from
+        the accounting path the same way a failing journal write is."""
+        self._subscribers.append(fn)
 
     def publish(self, msg, reason: str = "unknown") -> None:
         fire = False
@@ -88,6 +99,11 @@ class DeadLettersListener:
                 self.journal.record(reason, msg)
             except Exception:
                 pass        # durability is best-effort; counting is not
+        for fn in self._subscribers:
+            try:
+                fn(reason, msg)
+            except Exception:
+                pass        # observers are best-effort; counting is not
         if fire and self.alert_hook is not None:
             self.alert_hook(reason, self.alert_threshold)
 

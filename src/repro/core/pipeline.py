@@ -932,6 +932,15 @@ class AlertMixPipeline:
                         batch=self.cfg.replay_batch)
                     rsp.set("replayed", res["replayed"])
                 self.metrics.replayed_total += res["replayed"]
+                if res.get("stopped_early"):
+                    # a replay batch failed to land (e.g. one transient
+                    # write error) and the backlog is only partly
+                    # drained.  A transient failure does NOT make the
+                    # backend unhealthy, so without re-arming the flip
+                    # here the residue would sit in the journal until
+                    # the next full down/up cycle — potentially forever
+                    self._backend_health[name] = was   # retry the flip
+
 
     def replay_status(self) -> dict:
         """Replay-engine + journal status (``{"enabled": False}`` when no

@@ -94,18 +94,27 @@ class SourceSimulator:
             rng = self._rng(src, b)
             n = self._poisson(rng, self._rate(src, b * 3600.0))
             for i in range(n):
+                # draw the COMPLETE item before the window filter: every
+                # fetch must consume the identical rng stream regardless
+                # of its (since, now] alignment, or the same guid index
+                # denotes different events in different fetches — an
+                # overlap-window refetch (or a post-crash cursor replay)
+                # would then emit a known guid with a NEW timestamp,
+                # turning "dedup absorbs refetches" into silent
+                # duplication once the dedup window is fresh
                 t = b * 3600.0 + rng.random() * 3600.0
-                if not (since < t <= now):
-                    continue
                 if rng.random() < self.dup_fraction:
                     guid = f"syndicated-{b}-{i % 7}"       # shared across sources
                 else:
                     guid = f"{src.sid}-{b}-{i}"
                 title = " ".join(rng.choices(_WORDS, k=6))
                 body = " ".join(rng.choices(_WORDS, k=60))
+                malformed = rng.random() < self.malformed_fraction
+                if not (since < t <= now):
+                    continue
                 items.append(FeedItem(
                     guid=guid, title=title, body=body, published_at=t,
-                    malformed=rng.random() < self.malformed_fraction,
+                    malformed=malformed,
                 ))
         if not items and etag is not None:
             return FetchResult(NOT_MODIFIED, etag=etag, last_modified=since)

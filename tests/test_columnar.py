@@ -3,6 +3,7 @@ the sealed-scan fast path, keyed compaction, retention, tiered offload,
 and the failure matrix the subsystem must survive — corrupt blocks,
 torn seals, missing cold objects, compaction racing truncate."""
 import json
+import math
 import os
 import zlib
 
@@ -340,3 +341,110 @@ def test_pipeline_columnar_replay_and_maintenance(tmp_path):
     snap = p.metrics_snapshot()
     assert "store_columnar_sealed_segments_total" in snap["counters"]
     p.close()
+
+
+# ---- property: block round-trip over adversarial payloads -------------------
+
+from _hyp import given, settings, st  # noqa: E402
+
+
+def _eq(a, b):
+    """Structural equality, NaN-aware, tolerant of the ONE documented
+    lossy coercion: a mixed int/float column decodes ints as floats."""
+    if isinstance(a, dict) and isinstance(b, dict):
+        return set(a) == set(b) and all(_eq(a[k], b[k]) for k in a)
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return len(a) == len(b) and all(_eq(x, y) for x, y in zip(a, b))
+    if isinstance(a, bool) or isinstance(b, bool):
+        return a is b
+    if isinstance(a, (int, float)) and isinstance(b, (int, float)):
+        fa, fb = float(a), float(b)
+        if math.isnan(fa) or math.isnan(fb):
+            return math.isnan(fa) and math.isnan(fb)
+        return fa == fb
+    return a == b
+
+
+_scalar = st.one_of(
+    st.none(),
+    st.booleans(),
+    st.integers(min_value=-(2 ** 70), max_value=2 ** 70),
+    st.floats(allow_nan=True, allow_infinity=True),
+    st.text(max_size=20),
+)
+
+_payload = st.one_of(
+    # conforming {"id", "doc"}: unicode keys, hostile values
+    st.fixed_dictionaries({
+        "id": st.text(min_size=1, max_size=24),
+        "doc": st.dictionaries(
+            st.text(min_size=1, max_size=12), _scalar, max_size=6),
+    }),
+    # non-conforming payloads ride the _raw json lane verbatim
+    _scalar,
+    st.lists(_scalar, max_size=4),
+    st.dictionaries(st.text(min_size=1, max_size=8), _scalar, max_size=4),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(_payload, min_size=1, max_size=40))
+def test_block_roundtrip_property(payloads):
+    """encode -> decode is identity (modulo the documented int-in-float
+    -column coercion) for ANY mix of conforming docs with arbitrary
+    unicode keys / NaN / inf values and non-conforming raw payloads."""
+    recs = [(i * 3, p) for i, p in enumerate(payloads)]
+    blk = next(iter_blocks(encode_block(recs)))
+    out = blk.records()
+    assert len(out) == len(recs)
+    for (off_in, p_in), (off_out, p_out) in zip(recs, out):
+        assert off_in == off_out
+        assert _eq(p_in, p_out), (p_in, p_out)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(
+    st.fixed_dictionaries({
+        "id": st.text(min_size=1, max_size=16),
+        "doc": st.fixed_dictionaries({
+            "published_at": st.floats(0, 1e9, allow_nan=False),
+            "key": st.text(min_size=1, max_size=8)})}),
+    min_size=1, max_size=32))
+def test_block_stats_bound_every_row(payloads):
+    """min/max ts and key-range stats must bound every conforming row —
+    they are what pruned scans trust to SKIP blocks."""
+    recs = [(i, p) for i, p in enumerate(payloads)]
+    blk = next(iter_blocks(encode_block(recs)))
+    ts = [p["doc"]["published_at"] for p in payloads]
+    keys = [p["doc"]["key"] for p in payloads]
+    if blk.stats.get("ts_min") is not None:
+        assert blk.stats["ts_min"] <= min(ts)
+        assert blk.stats["ts_max"] >= max(ts)
+    if blk.stats.get("key_min") is not None:
+        assert blk.stats["key_min"] <= min(keys)
+        assert blk.stats["key_max"] >= max(keys)
+
+
+def test_block_roundtrip_hostile_cases_concrete():
+    """Deterministic companion to the property test above: the same
+    adversarial shapes, runnable without hypothesis installed."""
+    cases = [
+        {"id": "ü–🦉", "doc": {"价": float("nan"), "b": float("inf"),
+                               "c": -float("inf")}},
+        {"id": "x", "doc": {"k": None, "m": True, "n": False}},
+        {"id": "y", "doc": {"big": 2 ** 70, "neg": -(2 ** 70),
+                            "mix_i": 3, "mix_f": 1.5}},
+        {"id": "z", "doc": {"mixed_col": 1}},     # int half of a column
+        {"id": "w", "doc": {"mixed_col": 2.5}},   # float half -> f8 lane
+        "raw-string",
+        ["raw", {"nested": float("nan")}],
+        {"not": "conforming"},
+        {"id": 5, "doc": {}},                     # non-str id -> raw lane
+        {"id": "t", "doc": {"s": "текст", "li": [1, "a", None]}},
+    ]
+    recs = [(i * 2, p) for i, p in enumerate(cases)]
+    out = next(iter_blocks(encode_block(recs))).records()
+    assert len(out) == len(recs)
+    for (off_in, p_in), (off_out, p_out) in zip(recs, out):
+        assert off_in == off_out
+        assert _eq(p_in, p_out), (p_in, p_out)

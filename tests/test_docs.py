@@ -72,6 +72,42 @@ def test_query_md_snippets_execute():
     assert len(ns["updates"]) == 2
 
 
+def test_chaos_md_snippets_execute():
+    """Every ```python block in docs/chaos.md runs, in order, in one
+    shared namespace — the chaos plane's doc cannot rot."""
+    blocks = _snippets(DOCS / "chaos.md")
+    assert len(blocks) >= 4, "chaos guide lost its code examples"
+    ns: dict = {}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"docs/chaos.md[block {i}]", "exec"), ns)
+        except Exception as e:           # pragma: no cover - failure path
+            raise AssertionError(
+                f"docs/chaos.md block {i} no longer runs: {e!r}\n"
+                f"---\n{block}") from e
+    # the guide's asserted invariants ran; spot-check the final state
+    assert ns["a"]["fingerprint"] == ns["b"]["fingerprint"]
+    assert ns["report"]["ledger"]["accepted"] > 0
+
+
+def test_chaos_md_catalog_matches_code():
+    """The scenario-catalog table documents every catalog entry, and the
+    failure table's dead-letter reasons are real taxonomy members."""
+    from repro.chaos import SCENARIOS
+    from repro.core.dead_letters import reason_in_taxonomy
+    text = (DOCS / "chaos.md").read_text(encoding="utf-8")
+    for name in SCENARIOS:
+        assert f"`{name}`" in text, \
+            f"docs/chaos.md scenario table is missing {name!r}"
+    catalog = text.split("## Failure catalog")[1].split("\n## ")[0]
+    reasons = re.findall(r"\| `(\w[\w:]*?)(?:<backend>)?` \|", catalog)
+    assert reasons, "failure catalog lost its dead-letter reason column"
+    for reason in reasons:
+        probe = reason + "x" if reason.endswith(":") else reason
+        assert reason_in_taxonomy(probe), \
+            f"docs/chaos.md cites unknown dead-letter reason {reason!r}"
+
+
 def test_architecture_md_taxonomy_matches_code():
     """The dead-letter reason table documents every family the code
     defines — a new reason without a docs row fails here."""

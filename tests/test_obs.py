@@ -573,3 +573,49 @@ def test_observability_bundle_status_and_close(tmp_path):
     assert st["tracer"]["sampled_traces"] == 1
     assert isinstance(st["metrics"], tuple)
     obs.close()
+
+
+# ---- property: observe_batch ≡ observe loop ---------------------------------
+
+def _assert_batch_equiv(batches):
+    """One histogram fed via observe_batch, one via an observe loop:
+    bucket counts / count / min / max must match exactly; sum is float
+    addition in a different association order, so approximately."""
+    h_batch = Histogram("h", "d")
+    h_loop = Histogram("h", "d")
+    for vals in batches:
+        h_batch.observe_batch(vals, plane="p")
+        for v in vals:
+            h_loop.observe(v, plane="p")
+    sa = {k: (s.counts, s.count, s.min, s.max, s.sum)
+          for k, s in h_batch._series.items()}
+    sb = {k: (s.counts, s.count, s.min, s.max, s.sum)
+          for k, s in h_loop._series.items()}
+    assert set(sa) == set(sb)
+    for k in sa:
+        ca, na, mina, maxa, suma = sa[k]
+        cb, nb, minb, maxb, sumb = sb[k]
+        assert ca == cb and na == nb and mina == minb and maxa == maxb
+        assert math.isclose(suma, sumb, rel_tol=1e-9, abs_tol=1e-12)
+
+
+def test_observe_batch_matches_loop_concrete():
+    _assert_batch_equiv([
+        [1e-9, 5e-7, 1e-6],        # below/at the first bucket bound
+        [0.001, 0.02, 0.5, 3.0],
+        [1e9, 7.25],               # beyond the last bound -> inf bucket
+        [0.25] * 40,
+    ])
+
+
+from _hyp import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(
+    st.lists(st.floats(min_value=1e-9, max_value=1e12,
+                       allow_nan=False, allow_infinity=False),
+             min_size=1, max_size=50),
+    min_size=1, max_size=10))
+def test_observe_batch_matches_loop_property(batches):
+    _assert_batch_equiv(batches)
